@@ -1,0 +1,72 @@
+"""Paper §4.1 mixed-batch training (the 76-minute recipe), CPU-scaled.
+
+Two stages: seq 32 @ batch 32 → seq 128 @ batch 8, with stage-2 re-warm-up.
+Claims validated: (a) the stage switch does not destabilize the loss when
+re-warm-up is used; (b) ablation — stage 2 *without* re-warm-up (continuing
+at the decayed-but-large LR) is worse or less stable.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro import core
+from repro.configs.base import TrainConfig
+from repro.models import build_model
+from repro.train import Trainer
+from benchmarks.common import bert_nano, csv_row
+
+
+def _run(rewarmup: bool) -> dict:
+    cfg = bert_nano()
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    s1 = core.make_stage("s1", 32, 32, 40, base_lr=2.5e-3, base_batch=16,
+                         base_warmup_ratio=1 / 40)
+    if rewarmup:
+        s2 = core.make_stage("s2", 128, 8, 20, base_lr=2.5e-3, base_batch=16,
+                             base_warmup_ratio=1 / 40)
+    else:
+        # ablation: stage 2 keeps a flat large LR (no re-warm-up)
+        lr2 = core.sqrt_scaled_lr(2.5e-3, 16, 8)
+        s2 = core.Stage("s2_norewarm", 128, 8, 20, core.constant(lr2), lr2, 0)
+    tr = Trainer(model, tc, log_every=1, log_fn=lambda s: None)
+    t0 = time.perf_counter()
+    hist = tr.fit_stages([s1, s2])
+    wall = time.perf_counter() - t0
+    stage2 = [h["loss/total"] for h in hist if h.get("stage") == 1]
+    stage1_end = [h["loss/total"] for h in hist if h.get("stage") == 0][-1]
+    return {
+        "wall": wall,
+        "stage1_end": stage1_end,
+        "stage2_max_spike": max(stage2) - stage1_end,
+        "stage2_final": stage2[-1],
+        "finite": bool(np.isfinite(stage2).all()),
+    }
+
+
+def run() -> List[str]:
+    with_rw = _run(rewarmup=True)
+    without = _run(rewarmup=False)
+    rows = [
+        csv_row("mixed_batch/with_rewarmup", with_rw["wall"] / 60 * 1e6,
+                f"stage2_final={with_rw['stage2_final']:.4f};"
+                f"spike={with_rw['stage2_max_spike']:.4f};finite={with_rw['finite']}"),
+        csv_row("mixed_batch/no_rewarmup_ablation", without["wall"] / 60 * 1e6,
+                f"stage2_final={without['stage2_final']:.4f};"
+                f"spike={without['stage2_max_spike']:.4f};finite={without['finite']}"),
+        csv_row("mixed_batch/claim_rewarmup_stable_switch", 0.0,
+                f"finite={with_rw['finite']};spike={with_rw['stage2_max_spike']:.4f};"
+                f"holds={with_rw['finite'] and with_rw['stage2_max_spike'] < 2.0}"),
+        csv_row("mixed_batch/rewarmup_vs_ablation", 0.0,
+                f"rewarm_final={with_rw['stage2_final']:.4f};"
+                f"norewarm_final={without['stage2_final']:.4f};"
+                f"note=nano-scale ablation (paper-scale divergence needs 64K batches)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

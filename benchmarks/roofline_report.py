@@ -1,0 +1,63 @@
+"""Roofline report: renders the dry-run JSONL (§Dry-run / §Roofline tables).
+
+Reads benchmarks/results/*.jsonl produced by repro.launch.dryrun and prints
+the per-(arch × shape × mesh) three-term roofline with dominant bottleneck.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import csv_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(pattern: str = "dryrun_baseline_v2.jsonl") -> List[dict]:
+    recs = []
+    for path in glob.glob(os.path.join(RESULTS, pattern)):
+        with open(path) as f:
+            recs.extend(json.loads(l) for l in f if l.strip())
+    return recs
+
+
+def run() -> List[str]:
+    recs = load()
+    if not recs:
+        recs = load("dryrun_baseline.jsonl")
+    rows = []
+    seen = set()
+    for r in recs:
+        key = (r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+        if key in seen:
+            continue
+        seen.add(key)
+        if r.get("status") == "skipped":
+            rows.append(csv_row(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                f"skipped;{r['note']}"))
+            continue
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            rl[max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: rl[k])] * 1e6,
+            f"dom={rl['dominant']};compute_ms={rl['compute_s']*1e3:.2f};"
+            f"memory_ms={rl['memory_s']*1e3:.2f};"
+            f"collective_ms={rl['collective_s']*1e3:.2f};"
+            f"useful_flop_frac={rl['useful_fraction']:.3f};"
+            f"args_GB={r['memory'].get('argument_size_in_bytes', 0)/1e9:.2f}",
+        ))
+    n_ok = sum(1 for r in recs if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs if r.get("status") == "skipped")
+    rows.append(csv_row("roofline/coverage", 0.0,
+                        f"ok={n_ok};skipped={n_skip}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one module per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table4] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (claims carry a ``holds=`` flag).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("table4", "benchmarks.table4_recipe_values", "Tables 4-5 recipe values (exact)"),
+    ("roofline", "benchmarks.roofline_report", "§Roofline report from dry-run JSONL"),
+    ("opt_step", "benchmarks.opt_step_bench", "fused vs unfused LAMB step"),
+    ("table1", "benchmarks.table1_batch_scaling", "Table 1/4 batch scaling"),
+    ("table2", "benchmarks.table2_lamb_vs_lars", "Table 2 LAMB vs LARS"),
+    ("mixed_batch", "benchmarks.mixed_batch_bench", "§4.1 mixed-batch + re-warmup"),
+    ("table3", "benchmarks.table3_optimizer_comparison", "Table 3 tuned baselines"),
+]
+
+FAST = {"table4", "roofline", "opt_step"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated suite keys")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the training suites (CPU-minutes each)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, module, desc in SUITES:
+        if only is not None and key not in only:
+            continue
+        if args.fast and key not in FAST:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{key}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {key}: {desc} [{time.perf_counter()-t0:.1f}s]", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

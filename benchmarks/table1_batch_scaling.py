@@ -1,0 +1,73 @@
+"""Paper Table 1/4 analogue: batch-size scaling at fixed epochs, untuned LAMB.
+
+Protocol (CPU-scaled): fixed token budget; batch grows 16→64 so steps shrink
+4×; LAMB's LR/warmup follow the paper's untuned recipe (sqrt scaling +
+linear-epoch warmup) — no per-batch tuning.  AdamW runs the same protocol as
+the reference point.
+
+Claim validated (CPU regime note): at paper scale training saturates and
+LAMB's large-batch quality matches small-batch outright; at this compute
+scale nothing saturates, so the claim is validated *comparatively* — LAMB's
+large-batch degradation must be smaller than AdamW's (LAMB "enables" the
+large batch), mirroring Table 1 vs the AdamW-stops-scaling finding (§4.1).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro import core
+from benchmarks.common import bert_cpu, csv_row, fixed_epoch_steps, train_once
+
+SEQ = 32
+BASE_BATCH = 16
+TOKENS = BASE_BATCH * SEQ * 600
+RECIPE = {"lamb": 6e-3, "adamw": 1e-3}
+
+
+def _cfg():
+    return bert_cpu().replace(n_layers=2, d_model=128, d_ff=256, vocab_size=512)
+
+
+def run(batches=(16, 64)) -> List[str]:
+    cfg = _cfg()
+    rows, results = [], {}
+    for opt, base_lr in RECIPE.items():
+        for b in batches:
+            steps = fixed_epoch_steps(TOKENS, b, SEQ)
+            lr = core.sqrt_scaled_lr(base_lr, BASE_BATCH, b)
+            wr = core.linear_epoch_warmup_ratio(1 / 40, BASE_BATCH, b)
+            t0 = time.perf_counter()
+            out = train_once(cfg, optimizer=opt, batch=b, seq=SEQ,
+                             steps=steps, lr=lr, warmup_ratio=wr)
+            us = (time.perf_counter() - t0) / max(steps, 1) * 1e6
+            results[(opt, b)] = out
+            rows.append(csv_row(
+                f"table1/{opt}_batch{b}", us,
+                f"steps={steps};lr={lr:.2e};eval_loss={out['eval_loss']:.4f};"
+                f"eval_acc={out['eval_acc']:.4f}",
+            ))
+    # Paper App. H: "validation loss is not reliable ... we use accuracy" —
+    # the claims therefore compare eval ACCURACY degradation.
+    small, big = batches[0], batches[-1]
+    deg = {
+        opt: results[(opt, small)]["eval_acc"] - results[(opt, big)]["eval_acc"]
+        for opt in RECIPE
+    }
+    rows.append(csv_row(
+        "table1/claim_lamb_scales_better_than_adamw", 0.0,
+        f"lamb_acc_degradation={deg['lamb']:.4f};"
+        f"adamw_acc_degradation={deg['adamw']:.4f};"
+        f"holds={deg['lamb'] < deg['adamw']}",
+    ))
+    rows.append(csv_row(
+        "table1/claim_lamb_best_at_large_batch", 0.0,
+        f"lamb_acc={results[('lamb', big)]['eval_acc']:.4f};"
+        f"adamw_acc={results[('adamw', big)]['eval_acc']:.4f};"
+        f"holds={results[('lamb', big)]['eval_acc'] >= results[('adamw', big)]['eval_acc']}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

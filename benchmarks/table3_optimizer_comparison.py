@@ -1,0 +1,83 @@
+"""Paper Table 3 / App. G analogue: LAMB vs tuned adaptive baselines.
+
+Each baseline gets a small LR grid (the paper grid-searches extensively);
+LAMB runs the single untuned recipe.  Claim validated: untuned LAMB matches
+or beats every tuned baseline at large batch.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import bert_nano, csv_row, fixed_epoch_steps, train_once
+
+SEQ = 32
+BATCH = 48
+TOKENS = 16 * SEQ * 450
+
+GRIDS = {
+    "adamw": [1e-3, 3e-3, 1e-2],
+    "adam": [1e-3, 3e-3, 1e-2],
+    "adagrad": [3e-3, 1e-2, 3e-2],
+    "momentum": [3e-2, 1e-1, 3e-1],
+}
+LAMB_LR = 6e-3 * (BATCH / 16) ** 0.5  # untuned recipe from base batch 16
+
+
+SEEDS = (0, 1, 2)  # seed-averaged: the 150-step nano regime is high-variance
+
+
+def _mean_acc(cfg, opt, lr, steps):
+    import numpy as np
+
+    accs = []
+    for seed in SEEDS:
+        out = train_once(cfg, optimizer=opt, batch=BATCH, seq=SEQ,
+                         steps=steps, lr=lr, warmup_ratio=0.1, seed=seed,
+                         eval_batches=8)
+        accs.append(0.0 if np.isnan(out["eval_loss"]) else out["eval_acc"])
+    return float(np.mean(accs)), out
+
+
+def run() -> List[str]:
+    cfg = bert_nano()
+    steps = fixed_epoch_steps(TOKENS, BATCH, SEQ)
+    rows = []
+    best = {}
+    for opt, grid in GRIDS.items():
+        # stage 1: pick LR on seed 0; stage 2: seed-average at the best LR
+        scores = []
+        for lr in grid:
+            out = train_once(cfg, optimizer=opt, batch=BATCH, seq=SEQ,
+                             steps=steps, lr=lr, warmup_ratio=0.1)
+            scores.append((out["eval_loss"], lr, out))
+        scores = [(l if not __import__("math").isnan(l) else 1e9, lr, o)
+                  for l, lr, o in scores]
+        _, lr, _ = min(scores)
+        acc, out = _mean_acc(cfg, opt, lr, steps)
+        best[opt] = acc
+        rows.append(csv_row(
+            f"table3/{opt}_tuned", out["wall_s"] / steps * 1e6,
+            f"best_lr={lr:.0e};mean_eval_acc={acc:.4f};seeds={len(SEEDS)}",
+        ))
+    acc, out = _mean_acc(cfg, "lamb", LAMB_LR, steps)
+    best["lamb"] = acc
+    rows.append(csv_row(
+        "table3/lamb_untuned", out["wall_s"] / steps * 1e6,
+        f"lr={LAMB_LR:.2e};mean_eval_acc={acc:.4f};seeds={len(SEEDS)}",
+    ))
+    # paper metric: accuracy (App. H); untuned LAMB within 0.02 of the best
+    # grid-tuned baseline.  NOTE: Table 3 is a full-convergence claim (90
+    # epochs @ ImageNet scale); at a 150-step nano budget it is the hardest
+    # to reproduce — result reported as measured.
+    holds = best["lamb"] >= max(v for k, v in best.items() if k != "lamb") - 0.02
+    rows.append(csv_row(
+        "table3/claim_untuned_lamb_competitive", 0.0,
+        ";".join(f"{k}_acc={v:.4f}" for k, v in sorted(best.items()))
+        + f";holds={holds};note=150-step nano regime (paper claim is at full convergence)",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""End-to-end driver: the paper's mixed-batch BERT recipe (§4.1), CPU-scaled.
+
+    PYTHONPATH=src python examples/mixed_batch_bert.py [--scale 64]
+
+Trains a BERT-family MLM encoder through BOTH stages of the 76-minute recipe
+— stage 1 at short sequences / large batch, stage 2 at 4x sequence length /
+smaller batch with LR re-warm-up — exactly the paper's procedure with every
+size divided by --scale.  A few hundred steps of a ~10M model by default.
+"""
+import argparse
+
+from repro import core
+from repro.configs.base import TrainConfig
+from repro.configs.bert_large import tiny
+from repro.models import build_model
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=2048,
+                    help="divide the paper's batch sizes by this")
+    ap.add_argument("--step-scale", type=int, default=32,
+                    help="divide the paper's step counts by this")
+    args = ap.parse_args()
+
+    cfg = tiny(vocab=2048)
+    model = build_model(cfg)
+    print(f"model: {cfg.name}  params={model.param_count()/1e6:.2f}M")
+
+    plan = core.bert_mixed_batch_plan(
+        seq1=32, seq2=128,                    # paper: 128 → 512
+        batch1=max(65536 // args.scale, 2),
+        batch2=max(32768 // args.scale, 1),
+        steps1=max(7038 // args.step_scale, 4),
+        steps2=max(1561 // args.step_scale, 2),
+    )
+    for s in plan:
+        print(f"  stage {s.name}: seq={s.seq_len} batch={s.batch_size} "
+              f"steps={s.steps} lr={s.learning_rate:.2e} "
+              f"rewarmup={s.warmup_steps} steps")
+
+    tc = TrainConfig(optimizer="lamb", learning_rate=plan[0].learning_rate)
+    trainer = Trainer(model, tc, log_every=20)
+    hist = trainer.fit_stages(plan)
+    s2 = [h for h in hist if h.get("stage") == 1]
+    print(f"\nstage-2 final loss {s2[-1]['loss/total']:.4f} "
+          f"(stage switch survived re-warm-up: "
+          f"{all(h['loss/total'] < 50 for h in s2)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""LAMB vs Adam/AdamW/LARS/momentum at growing batch size (Tables 2-3 shape).
+
+    PYTHONPATH=src python examples/optimizer_comparison.py [--batches 8,32]
+
+Fixed token budget: larger batch = proportionally fewer steps.  LAMB uses the
+untuned recipe; baselines use a reasonable fixed LR.  Prints a table of final
+eval loss per (optimizer, batch).
+"""
+import argparse
+
+from repro import core
+from benchmarks.common import bert_cpu, fixed_epoch_steps, train_once
+
+BASE = {"lamb": 2.5e-3, "adamw": 1e-3, "adam": 1e-3, "lars": 1.0,
+        "momentum": 1e-1}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", default="8,32")
+    ap.add_argument("--tokens", type=int, default=16 * 64 * 80)
+    args = ap.parse_args()
+    batches = [int(b) for b in args.batches.split(",")]
+
+    cfg = bert_cpu()
+    print(f"{'optimizer':10s} " + " ".join(f"batch={b:<6d}" for b in batches))
+    for opt, base_lr in BASE.items():
+        row = []
+        for b in batches:
+            steps = fixed_epoch_steps(args.tokens, b, 64)
+            lr = core.sqrt_scaled_lr(base_lr, 16, b)
+            out = train_once(cfg, optimizer=opt, batch=b, seq=64,
+                             steps=steps, lr=lr, warmup_ratio=0.1)
+            row.append(out["eval_loss"])
+        print(f"{opt:10s} " + " ".join(f"{v:<12.4f}" for v in row))
+
+
+if __name__ == "__main__":
+    main()

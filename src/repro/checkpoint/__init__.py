@@ -1,0 +1,13 @@
+from repro.checkpoint.io import (
+    checkpoint_step,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "checkpoint_step",
+    "latest_checkpoint",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

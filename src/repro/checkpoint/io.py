@@ -1,0 +1,89 @@
+"""Checkpointing: pytree ⇄ directory of .npy leaves + JSON manifest.
+
+No orbax in this environment; this is a small but complete implementation:
+atomic writes (tmp dir + rename), step-numbered checkpoints, latest-pointer,
+restore onto abstract targets (dtype/shape checked), optimizer state
+round-trips because states are plain pytrees of arrays/ints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.common.pytree import tree_leaves_with_paths
+
+
+def _sanitize(path: str) -> str:
+    return path.replace("/", "__")
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Write `tree` under directory/step_<N>/ atomically. Returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        manifest = {"step": step, "leaves": []}
+        for path, leaf in tree_leaves_with_paths(tree):
+            arr = np.asarray(leaf)
+            fname = _sanitize(path) + ".npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {"path": path, "file": fname, "dtype": str(arr.dtype),
+                 "shape": list(arr.shape)}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(os.path.basename(final))
+    return final
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    pointer = os.path.join(directory, "LATEST")
+    if not os.path.exists(pointer):
+        return None
+    with open(pointer) as f:
+        name = f.read().strip()
+    path = os.path.join(directory, name)
+    return path if os.path.isdir(path) else None
+
+
+def restore_checkpoint(path: str, target: Any) -> Any:
+    """Restore into the structure of `target` (arrays or ShapeDtypeStructs)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    from repro.common.pytree import path_str
+
+    leaves = []
+    for kp, tgt in flat:
+        p = path_str(kp)
+        if p not in by_path:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        entry = by_path[p]
+        arr = np.load(os.path.join(path, entry["file"]))
+        tgt_shape = tuple(tgt.shape)
+        if tuple(arr.shape) != tgt_shape:
+            raise ValueError(f"{p}: shape {arr.shape} != target {tgt_shape}")
+        leaves.append(arr.astype(tgt.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return int(json.load(f)["step"])

@@ -1,0 +1,23 @@
+from repro.common.pytree import (
+    global_norm,
+    merge_trees,
+    path_mask,
+    tree_bytes,
+    tree_leaves_with_paths,
+    tree_map_with_path,
+    tree_paths,
+    tree_size,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "global_norm",
+    "merge_trees",
+    "path_mask",
+    "tree_bytes",
+    "tree_leaves_with_paths",
+    "tree_map_with_path",
+    "tree_paths",
+    "tree_size",
+    "tree_zeros_like",
+]

@@ -1,0 +1,96 @@
+"""Path-aware pytree utilities.
+
+The whole framework represents parameters as nested dicts of arrays.  These
+helpers provide path-labelled mapping (used for weight-decay masks, trust-ratio
+exclusion lists, per-layer diagnostics) without depending on flax.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def path_str(path) -> str:
+    """Render a jax key-path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: PyTree, *rest: PyTree) -> PyTree:
+    """Map fn(path_string, leaf, *rest_leaves) over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x, *r: fn(path_str(kp), x, *r), tree, *rest
+    )
+
+
+def tree_paths(tree: PyTree) -> PyTree:
+    """Tree of the same structure whose leaves are their own path strings."""
+    return jax.tree_util.tree_map_with_path(lambda kp, _: path_str(kp), tree)
+
+
+def path_mask(tree: PyTree, patterns, *, default: bool = False) -> PyTree:
+    """Boolean mask tree: leaf True iff any regex in `patterns` matches its path.
+
+    With default=True semantics inverted (True unless matched).
+    """
+    compiled = [re.compile(p) for p in patterns]
+
+    def match(path: str, _):
+        hit = any(c.search(path) for c in compiled)
+        return (not hit) if default else hit
+
+    return tree_map_with_path(match, tree)
+
+
+def tree_leaves_with_paths(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(kp), leaf) for kp, leaf in flat]
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        dt = jnp.dtype(x.dtype)
+        total += int(x.size) * dt.itemsize
+    return total
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def merge_trees(base: Mapping, override: Mapping) -> dict:
+    """Recursive dict merge (override wins)."""
+    out = dict(base)
+    for k, v in override.items():
+        if k in out and isinstance(out[k], Mapping) and isinstance(v, Mapping):
+            out[k] = merge_trees(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.array(0.0)

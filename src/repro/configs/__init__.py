@@ -1,0 +1,91 @@
+"""Config registry: ``get_config("deepseek-v3-671b")``, smoke variants, and
+the (architecture × shape) applicability plan used by the dry-run."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import InputShape, ModelConfig, TrainConfig
+from repro.configs.shapes import SHAPES, get_shape
+
+_ARCH_MODULES = {
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "paligemma-3b": "paligemma_3b",
+    "granite-20b": "granite_20b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "command-r-35b": "command_r_35b",
+    "xlstm-350m": "xlstm_350m",
+    "smollm-360m": "smollm_360m",
+    "bert-large": "bert_large",
+}
+
+ARCHS: List[str] = [k for k in _ARCH_MODULES if k != "bert-large"]
+
+
+def _module(name: str):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke()
+
+
+# ---------------------------------------------------------------------------
+# (arch × shape) plan
+# ---------------------------------------------------------------------------
+
+SWA_WINDOW_500K = 4096  # sliding-window variant used by dense archs on long_500k
+
+
+def plan(cfg: ModelConfig, shape: InputShape) -> Tuple[Optional[ModelConfig], str]:
+    """Returns (possibly-modified config, note).  config=None ⇒ skipped.
+
+    Skips (recorded in DESIGN.md / EXPERIMENTS.md):
+      * encoder-only archs have no decode step → decode shapes skipped;
+      * full-attention archs run long_500k only via the sliding-window
+        variant we implement (cfg.sliding_window := 4096).
+    """
+    if shape.kind == "decode" and cfg.is_encoder:
+        return None, "skip: encoder-only (no decode step)"
+    if shape.name == "long_500k":
+        sub_quadratic = cfg.family in ("ssm", "hybrid") or cfg.use_mla
+        if not sub_quadratic and cfg.sliding_window is None:
+            return (
+                cfg.replace(sliding_window=SWA_WINDOW_500K),
+                f"variant: sliding_window={SWA_WINDOW_500K} (full attention is "
+                "not sub-quadratic; SWA variant per DESIGN.md)",
+            )
+    if shape.kind == "prefill" and cfg.is_encoder:
+        return cfg, "encoder forward (no cache) stands in for prefill"
+    return cfg, "ok"
+
+
+def full_plan() -> Dict[Tuple[str, str], Tuple[Optional[ModelConfig], str]]:
+    out = {}
+    for arch in ARCHS:
+        for sname, shape in SHAPES.items():
+            out[(arch, sname)] = plan(get_config(arch), shape)
+    return out
+
+
+__all__ = [
+    "ARCHS",
+    "InputShape",
+    "ModelConfig",
+    "SHAPES",
+    "TrainConfig",
+    "full_plan",
+    "get_config",
+    "get_shape",
+    "plan",
+    "smoke_config",
+]

@@ -1,0 +1,132 @@
+"""Model / training configuration dataclasses.
+
+One ``ModelConfig`` describes any architecture in the zoo; family-specific
+fields are simply unused elsewhere.  Configs are frozen dataclasses so they
+are hashable (usable as jit static args).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None  # default: d_model // n_heads
+
+    # --- attention ---
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    causal: bool = True            # False → encoder (hubert)
+    sliding_window: Optional[int] = None
+    use_qkv_bias: bool = False
+    norm_type: str = "rmsnorm"     # rmsnorm | layernorm
+    act_fn: str = "silu"           # silu | gelu
+    gated_mlp: bool = True
+    tie_embeddings: bool = False
+    logit_softcap: Optional[float] = None
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    moe_layer_period: int = 1      # every k-th layer is MoE (1 = all)
+    n_dense_layers: int = 0        # leading dense layers (DeepSeek-V3: 3)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 0.0
+
+    # --- MLA (DeepSeek) ---
+    use_mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    mla_absorb: bool = False       # beyond-paper decode optimization (§Perf)
+
+    # --- hybrid / mamba (Jamba) ---
+    mamba_chunk: Optional[int] = None  # chunked SSM scan (bounds temp memory)
+    attn_period: int = 0           # 1 attention layer per `attn_period` layers
+    moe_period_in_block: int = 2   # within a hybrid block, MoE every k layers
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: Optional[int] = None  # default ceil(d_model/16)
+
+    # --- xLSTM ---
+    slstm_ratio: int = 2           # 1 sLSTM per `slstm_ratio` layers (rest mLSTM)
+    xlstm_proj_factor: float = 2.0
+
+    # --- modality frontends (stubbed per assignment) ---
+    n_prefix_tokens: int = 0       # image patches (vlm) / audio frames use seq directly
+    frontend: str = "none"         # none | vision_stub | audio_stub
+    mask_ratio: float = 0.0        # hubert masked-prediction ratio
+
+    # --- MTP (DeepSeek-V3) ---
+    use_mtp: bool = False
+    mtp_loss_coef: float = 0.3
+
+    # --- numerics / compile ---
+    param_dtype: str = "float32"
+    activation_dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: str = "none"            # none | full
+    use_flash_kernel: bool = False # route attention through the Pallas kernel
+    use_fused_lamb_kernel: bool = False
+
+    # --- optimizer interaction ---
+    lamb_granularity: str = "slice"  # slice (per stacked layer) | leaf
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA group mismatch"
+
+    @property
+    def q_groups(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "lamb"        # lamb | lars | nlamb | nnlamb | adam | adamw | adagrad | momentum
+    learning_rate: float = 1e-3
+    total_steps: int = 100
+    warmup_ratio: float = 1.0 / 320.0
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-6
+    phi_bounds: Optional[Tuple[float, float]] = None
+    grad_clip_norm: Optional[float] = 1.0
+    bias_correction: bool = True
+    moment_dtype: Optional[str] = None  # e.g. "bfloat16" — halves m/v state
+    microbatch: Optional[int] = None  # grad-accumulation slices
+    seed: int = 0
+    log_trust_ratios: bool = False

@@ -1,0 +1,51 @@
+"""repro.core — the paper's contribution: layerwise-adaptive large-batch optimization."""
+from repro.core.lamb import lamb
+from repro.core.lars import lars
+from repro.core.mixed_batch import Stage, bert_mixed_batch_plan, make_stage, scaled_plan
+from repro.core.nlamb import nlamb, nnlamb
+from repro.core.schedules import (
+    adam_correction_equivalent_lr,
+    constant,
+    goyal_step_schedule,
+    linear_epoch_warmup_ratio,
+    linear_warmup,
+    piecewise_stage_schedule,
+    polynomial_decay,
+    sqrt_scaled_lr,
+    untuned_lamb_schedule,
+    warmup_poly_decay,
+)
+from repro.core.strategy import (
+    layerwise_adapt,
+    layerwise_adaptation,
+    phi_clip,
+    trust_ratio,
+)
+from repro.core.trust_ratio import summarize_trust_ratios, trust_ratio_tree
+
+__all__ = [
+    "Stage",
+    "adam_correction_equivalent_lr",
+    "bert_mixed_batch_plan",
+    "constant",
+    "goyal_step_schedule",
+    "lamb",
+    "lars",
+    "layerwise_adapt",
+    "layerwise_adaptation",
+    "linear_epoch_warmup_ratio",
+    "linear_warmup",
+    "make_stage",
+    "nlamb",
+    "nnlamb",
+    "phi_clip",
+    "piecewise_stage_schedule",
+    "polynomial_decay",
+    "scaled_plan",
+    "sqrt_scaled_lr",
+    "summarize_trust_ratios",
+    "trust_ratio",
+    "trust_ratio_tree",
+    "untuned_lamb_schedule",
+    "warmup_poly_decay",
+]

@@ -1,0 +1,43 @@
+"""LARS (Algorithm 1) — You et al. 2017, as formalized by this paper.
+
+m_t = b1 * m_{t-1} + (1 - b1) * (g_t + lambda * x_t)
+x_{t+1}^(i) = x_t^(i) - eta * phi(||x^(i)||) / ||m^(i)|| * m^(i)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core.strategy import layerwise_adaptation
+from repro.optim.base import (
+    GradientTransformation,
+    PyTree,
+    ScalarOrSchedule,
+    add_decayed_weights,
+    chain,
+    scale_by_learning_rate,
+    trace,
+)
+
+
+def lars(
+    learning_rate: ScalarOrSchedule,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    *,
+    wd_mask: Optional[PyTree] = None,
+    trust_mask: Optional[PyTree] = None,
+    layer_axes: Optional[PyTree] = None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+) -> GradientTransformation:
+    transforms = []
+    if weight_decay:
+        # Algorithm 1 folds weight decay into the momentum buffer input.
+        transforms.append(add_decayed_weights(weight_decay, wd_mask))
+    transforms.append(trace(momentum, average=True))
+    transforms.append(
+        layerwise_adaptation(
+            phi_bounds=phi_bounds, trust_mask=trust_mask, layer_axes=layer_axes
+        )
+    )
+    transforms.append(scale_by_learning_rate(learning_rate))
+    return chain(*transforms)

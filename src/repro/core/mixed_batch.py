@@ -1,0 +1,90 @@
+"""Mixed-batch training (paper §4.1) — the 76-minute BERT recipe.
+
+BERT pre-training is two-phase: 9/10 of epochs at seq 128, 1/10 at seq 512.
+The paper's observation: phase 1 can use a much larger batch (65536) than the
+phase-2 memory limit (32768), and phase 2 must *re-warm-up* the LR from zero
+because switching sequence length changes the optimization problem.
+
+This module describes the stage plan declaratively; the Trainer re-jits per
+stage (shapes change between stages).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.schedules import (
+    Schedule,
+    linear_epoch_warmup_ratio,
+    sqrt_scaled_lr,
+    untuned_lamb_schedule,
+    warmup_poly_decay,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    seq_len: int
+    batch_size: int
+    steps: int
+    schedule: Schedule
+    learning_rate: float
+    warmup_steps: int
+
+
+def make_stage(
+    name: str,
+    seq_len: int,
+    batch_size: int,
+    steps: int,
+    *,
+    base_lr: float = 5e-3 / 8.0,
+    base_batch: int = 512,
+    base_warmup_ratio: float = 1.0 / 320.0,
+) -> Stage:
+    lr = sqrt_scaled_lr(base_lr, base_batch, batch_size)
+    ratio = linear_epoch_warmup_ratio(base_warmup_ratio, base_batch, batch_size)
+    warmup = int(round(ratio * steps))
+    sched = warmup_poly_decay(lr, steps, warmup)
+    return Stage(name, seq_len, batch_size, steps, sched, lr, warmup)
+
+
+def bert_mixed_batch_plan(
+    *,
+    seq1: int = 128,
+    seq2: int = 512,
+    batch1: int = 65536,
+    batch2: int = 32768,
+    steps1: int = 7038,
+    steps2: int = 1561,
+    base_lr: float = 5e-3 / 8.0,
+    base_batch: int = 512,
+    base_warmup_ratio: float = 1.0 / 320.0,
+) -> List[Stage]:
+    """The paper's 8599-iteration mixed-batch recipe (64K/32K).
+
+    Stage step counts follow the paper: 8599 total iterations; each stage has
+    its own sqrt-scaled LR and its own warmup (stage 2 = re-warm-up from 0).
+    """
+    mk = lambda *a: make_stage(
+        *a, base_lr=base_lr, base_batch=base_batch, base_warmup_ratio=base_warmup_ratio
+    )
+    return [
+        mk("stage1_seq128", seq1, batch1, steps1),
+        mk("stage2_seq512_rewarmup", seq2, batch2, steps2),
+    ]
+
+
+def scaled_plan(
+    plan: Sequence[Stage], *, batch_divisor: int = 1, step_divisor: int = 1
+) -> List[Stage]:
+    """Shrink a plan for CPU-scale validation runs, preserving its structure."""
+    out = []
+    for s in plan:
+        batch = max(s.batch_size // batch_divisor, 1)
+        steps = max(s.steps // step_divisor, 2)
+        out.append(
+            make_stage(s.name, s.seq_len, batch, steps)
+        )
+    return out

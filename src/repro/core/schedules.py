@@ -1,0 +1,168 @@
+"""Learning-rate schedules and the paper's batch-size scaling rules (§4.3).
+
+Reproduces Tables 4–5 exactly:
+  * square-root LR scaling:      lr(B) = lr(B0) * sqrt(B/B0)
+  * linear-epoch warmup:         warmup_ratio(B) = warmup_ratio(B0) * B/B0
+    (warmup covers a fixed number of *epochs*, so its fraction of the — now
+    shorter — step budget grows linearly with batch size)
+  * polynomial decay:            eta_t = eta_0 * (1 - t/T)
+  * re-warmup for mixed-batch stage 2 (§4.1)
+  * Goyal et al. step schedule (5-epoch warmup, x0.1 @ 30/60/80) for baselines.
+
+All schedules are jnp-traceable functions of an int32 step count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def polynomial_decay(
+    base_lr: float, total_steps: int, power: float = 1.0, end_lr: float = 0.0
+) -> Schedule:
+    """eta_t = end + (eta_0 - end) * (1 - t/T)^power  (paper uses power=1)."""
+
+    def schedule(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return end_lr + (base_lr - end_lr) * (1.0 - frac) ** power
+
+    return schedule
+
+
+def linear_warmup(base_lr: float, warmup_steps: int) -> Schedule:
+    def schedule(step):
+        if warmup_steps <= 0:
+            return jnp.asarray(base_lr, jnp.float32)
+        return base_lr * jnp.minimum(step.astype(jnp.float32) / warmup_steps, 1.0)
+
+    return schedule
+
+
+def warmup_poly_decay(
+    base_lr: float,
+    total_steps: int,
+    warmup_steps: int,
+    power: float = 1.0,
+    end_lr: float = 0.0,
+) -> Schedule:
+    """BERT/LAMB schedule: linear warmup to base_lr then polynomial decay to 0.
+
+    Decay runs over the post-warmup remainder, starting at base_lr.
+    """
+    decay = polynomial_decay(base_lr, max(total_steps - warmup_steps, 1), power, end_lr)
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        after = decay(jnp.maximum(step - warmup_steps, 0.0))
+        return jnp.where(step < warmup_steps, warm, after) if warmup_steps > 0 else after
+
+    return schedule
+
+
+def sqrt_scaled_lr(base_lr: float, base_batch: int, batch: int) -> float:
+    """Square-root LR scaling rule (Table 4/5: lr = 5/(2^x * 1e3) pattern)."""
+    return base_lr * math.sqrt(batch / base_batch)
+
+
+def linear_epoch_warmup_ratio(base_ratio: float, base_batch: int, batch: int) -> float:
+    """Warmup-step *fraction* grows linearly with batch (fixed warmup epochs)."""
+    return min(base_ratio * batch / base_batch, 1.0)
+
+
+def untuned_lamb_schedule(
+    batch_size: int,
+    total_steps: int,
+    *,
+    base_lr: float = 5e-3 / 8.0,   # Table 4: 5/(2^3 * 1e3) at batch 512
+    base_batch: int = 512,
+    base_warmup_ratio: float = 1.0 / 320.0,
+    power: float = 1.0,
+) -> Tuple[Schedule, dict]:
+    """The paper's fully-automatic scaling recipe (Table 4 defaults for BERT).
+
+    Returns (schedule, info) where info records the derived lr/warmup so that
+    tests can check them against the paper's table.
+    """
+    lr = sqrt_scaled_lr(base_lr, base_batch, batch_size)
+    ratio = linear_epoch_warmup_ratio(base_warmup_ratio, base_batch, batch_size)
+    warmup_steps = int(round(ratio * total_steps))
+    sched = warmup_poly_decay(lr, total_steps, warmup_steps, power)
+    return sched, {
+        "learning_rate": lr,
+        "warmup_ratio": ratio,
+        "warmup_steps": warmup_steps,
+        "total_steps": total_steps,
+    }
+
+
+def piecewise_stage_schedule(
+    stage_schedules: Sequence[Schedule], stage_steps: Sequence[int]
+) -> Schedule:
+    """Concatenate per-stage schedules; each stage's local step restarts at 0.
+
+    Used for mixed-batch training: stage 2 gets its own warmup (*re-warmup*,
+    §4.1) instead of continuing stage 1's decay.
+    """
+    boundaries = []
+    acc = 0
+    for s in stage_steps:
+        boundaries.append(acc)
+        acc += s
+
+    def schedule(step):
+        step_f = step.astype(jnp.float32)
+        out = jnp.asarray(0.0, jnp.float32)
+        for sched, start, length in zip(stage_schedules, boundaries, stage_steps):
+            local = jnp.clip(step_f - start, 0.0, float(length))
+            inside = (step_f >= start) & (step_f < start + length)
+            out = jnp.where(inside, sched(local), out)
+        # past the end: last stage's final value
+        last_sched, last_start = stage_schedules[-1], boundaries[-1]
+        out = jnp.where(
+            step_f >= last_start + stage_steps[-1],
+            last_sched(jnp.asarray(float(stage_steps[-1]))),
+            out,
+        )
+        return out
+
+    return schedule
+
+
+def goyal_step_schedule(
+    base_lr: float,
+    steps_per_epoch: int,
+    warmup_epochs: float = 5.0,
+    milestones: Sequence[int] = (30, 60, 80),
+    gamma: float = 0.1,
+) -> Schedule:
+    """Goyal et al. (2017) ResNet recipe — used for tuned baselines (App. H)."""
+
+    def schedule(step):
+        epoch = step.astype(jnp.float32) / max(steps_per_epoch, 1)
+        warm = base_lr * epoch / warmup_epochs
+        factor = jnp.asarray(1.0, jnp.float32)
+        for m in milestones:
+            factor = jnp.where(epoch >= m, factor * gamma, factor)
+        return jnp.where(epoch < warmup_epochs, warm, base_lr * factor)
+
+    return schedule
+
+
+def adam_correction_equivalent_lr(
+    step: jnp.ndarray, b1: float = 0.9, b2: float = 0.999
+) -> jnp.ndarray:
+    """App. E: adam bias correction == an implicit LR factor sqrt(1-b2^t)/(1-b1^t).
+
+    Exposed for the App-E validation benchmark (correction ≈ warmup claim).
+    """
+    t = step.astype(jnp.float32) + 1.0
+    return jnp.sqrt(1.0 - b2**t) / (1.0 - b1**t)

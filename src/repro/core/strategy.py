@@ -1,0 +1,142 @@
+"""The paper's §3 *general layerwise adaptation strategy* as a combinator.
+
+Given any base optimizer whose update direction is ``u_t`` the strategy
+rescales each layer's update to
+
+    x_{t+1}^(i) = x_t^(i) - eta * phi(||x_t^(i)||) / ||u_t^(i)|| * u_t^(i)
+
+with ``phi(z) = clip(z, gamma_l, gamma_u)``.  Instantiations:
+
+    layerwise_adapt(momentum-with-wd)  == LARS   (Algorithm 1)
+    layerwise_adapt(adam ∘ +wd)        == LAMB   (Algorithm 2)
+
+Two production details beyond the pseudocode (both match the reference
+TensorFlow implementation the paper links):
+
+  * degenerate norms: trust ratio falls back to 1 when either ||x|| or ||u||
+    is zero (otherwise zero-initialized layers could never move);
+  * exclusions: norm scales and biases bypass the ratio (``trust_mask``).
+
+**Scan-aware layerwise semantics**: deep stacks are stored as single stacked
+leaves (leading ``layers`` axis, consumed by ``lax.scan``).  ``layer_axes``
+gives the stacked-axis index per leaf; norms are then computed *per layer
+slice*, reproducing exactly the per-layer trust ratios of an unstacked model.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import EmptyState, GradientTransformation, PyTree
+
+
+def phi_clip(z: jnp.ndarray, bounds: Optional[Tuple[float, float]]) -> jnp.ndarray:
+    """phi(z) = min(max(z, gamma_l), gamma_u); identity when bounds is None."""
+    if bounds is None:
+        return z
+    lo, hi = bounds
+    return jnp.clip(z, lo, hi)
+
+
+def _slice_norm(
+    x: jnp.ndarray, layer_axis: Optional[int], ord: str = "l2"
+) -> jnp.ndarray:
+    """Norm over all axes except the stacked-layers axis (broadcastable).
+
+    App. F of the paper ablates the norm choice (L1 / L2 / L∞) and finds
+    <0.1% accuracy difference; L2 is the default.
+    """
+    x = x.astype(jnp.float32)
+    if layer_axis is None or layer_axis < 0:
+        axes = None
+        keep = False
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != layer_axis)
+        keep = True
+    if ord == "l1":
+        return jnp.sum(jnp.abs(x), axis=axes, keepdims=keep)
+    if ord == "linf":
+        return jnp.max(jnp.abs(x), axis=axes, keepdims=keep)
+    return jnp.sqrt(jnp.sum(jnp.square(x), axis=axes, keepdims=keep))
+
+
+def trust_ratio(
+    param: jnp.ndarray,
+    update: jnp.ndarray,
+    *,
+    layer_axis: Optional[int] = None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    eps: float = 0.0,
+    norm_ord: str = "l2",
+) -> jnp.ndarray:
+    """phi(||x||)/||u|| with the reference-impl degenerate-norm fallbacks."""
+    w_norm = phi_clip(_slice_norm(param, layer_axis, norm_ord), phi_bounds)
+    u_norm = _slice_norm(update, layer_axis, norm_ord)
+    safe = w_norm / (u_norm + eps)
+    ratio = jnp.where(w_norm > 0, jnp.where(u_norm > 0, safe, 1.0), 1.0)
+    return ratio
+
+
+def layerwise_adaptation(
+    *,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    trust_mask: Optional[PyTree] = None,
+    layer_axes: Optional[PyTree] = None,
+    eps: float = 0.0,
+    norm_ord: str = "l2",   # l2 | l1 | linf  (App. F ablation)
+) -> GradientTransformation:
+    """GradientTransformation applying the layerwise trust-ratio rescale."""
+
+    def init(params):
+        return EmptyState()
+
+    def update(updates, state, params=None):
+        if params is None:
+            raise ValueError("layerwise_adaptation requires params")
+
+        # None is a pytree-empty node, so "no stacked axis" is encoded as -1.
+        la = layer_axes
+        if la is None:
+            la = jax.tree.map(lambda _: -1, updates)
+        else:
+            la = jax.tree.map(lambda a: -1 if a is None else a, la,
+                              is_leaf=lambda x: x is None or isinstance(x, int))
+        tm = trust_mask
+        if tm is None:
+            tm = jax.tree.map(lambda _: True, updates)
+
+        def one(u, p, axis, masked_in):
+            if not masked_in:
+                return u
+            r = trust_ratio(p, u, layer_axis=axis, phi_bounds=phi_bounds,
+                            eps=eps, norm_ord=norm_ord)
+            return (r * u.astype(jnp.float32)).astype(u.dtype)
+
+        new_updates = jax.tree.map(one, updates, params, la, tm)
+        return new_updates, state
+
+    return GradientTransformation(init, update)
+
+
+def layerwise_adapt(
+    base: GradientTransformation,
+    *,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    trust_mask: Optional[PyTree] = None,
+    layer_axes: Optional[PyTree] = None,
+) -> GradientTransformation:
+    """The paper's general strategy: wrap any base optimizer A.
+
+    Note the learning rate must be applied *after* this wrapper (the wrapper
+    normalizes whatever direction the base produces).
+    """
+    from repro.optim.base import chain
+
+    return chain(
+        base,
+        layerwise_adaptation(
+            phi_bounds=phi_bounds, trust_mask=trust_mask, layer_axes=layer_axes
+        ),
+    )

@@ -1,0 +1,49 @@
+"""Trust-ratio diagnostics (paper App. H Figures 9-14).
+
+The trainer can log per-layer trust ratios phi(||x||)/||u|| every step; these
+are the quantities the paper plots to show LAMB "helping slow learners".
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import _slice_norm, phi_clip
+
+
+def trust_ratio_tree(
+    params,
+    updates,
+    *,
+    layer_axes=None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+):
+    """Tree of per-leaf (or per-layer-slice) trust ratios, squeezed to vectors."""
+    la = layer_axes
+    if la is None:
+        la = jax.tree.map(lambda _: -1, params)
+    else:
+        la = jax.tree.map(
+            lambda a: -1 if a is None else a, la,
+            is_leaf=lambda x: x is None or isinstance(x, int),
+        )
+
+    def one(p, u, axis):
+        w = phi_clip(_slice_norm(p, axis), phi_bounds)
+        g = _slice_norm(u, axis)
+        r = jnp.where(w > 0, jnp.where(g > 0, w / g, 1.0), 1.0)
+        return jnp.squeeze(r)
+
+    return jax.tree.map(one, params, updates, la)
+
+
+def summarize_trust_ratios(tree) -> dict:
+    leaves = [jnp.atleast_1d(x) for x in jax.tree.leaves(tree)]
+    flat = jnp.concatenate([x.reshape(-1) for x in leaves]) if leaves else jnp.zeros((1,))
+    return {
+        "trust_ratio/min": jnp.min(flat),
+        "trust_ratio/max": jnp.max(flat),
+        "trust_ratio/mean": jnp.mean(flat),
+    }

@@ -1,0 +1,19 @@
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import (
+    SyntheticLM,
+    audio_batch,
+    batch_iterator,
+    lm_batch,
+    make_batch,
+    vlm_batch,
+)
+
+__all__ = [
+    "DataPipeline",
+    "SyntheticLM",
+    "audio_batch",
+    "batch_iterator",
+    "lm_batch",
+    "make_batch",
+    "vlm_batch",
+]

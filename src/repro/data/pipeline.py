@@ -1,0 +1,64 @@
+"""Data pipeline: prefetch, device_put with sharding, stage-aware resizing.
+
+A thin production-style wrapper over the deterministic synthetic sources:
+  * host-sharded batches (each host generates only its slice)
+  * optional device placement with a NamedSharding (global arrays)
+  * stage switching (mixed-batch training changes (batch, seq) mid-run)
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import batch_iterator
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        batch: int,
+        seq: int,
+        *,
+        seed: int = 0,
+        sharding=None,
+        prefetch: int = 2,
+    ):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.sharding = sharding
+        self.prefetch = prefetch
+        self._it = batch_iterator(
+            cfg, batch, seq, seed=seed,
+            host_index=jax.process_index(), host_count=jax.process_count(),
+        )
+        self._buf: collections.deque = collections.deque()
+
+    def _fill(self):
+        while len(self._buf) < self.prefetch:
+            b = next(self._it)
+            if self.sharding is not None:
+                b = jax.tree.map(
+                    lambda x, s=self.sharding: jax.device_put(x, s), b
+                )
+            self._buf.append(b)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        self._fill()
+        return self._buf.popleft()
+
+    def with_stage(self, batch: int, seq: int) -> "DataPipeline":
+        """New pipeline for a mixed-batch stage (fresh shapes, same source)."""
+        return DataPipeline(
+            self.cfg, batch, seq, seed=self.seed,
+            sharding=self.sharding, prefetch=self.prefetch,
+        )

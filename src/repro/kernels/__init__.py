@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lamb_update import lamb_update
+from repro.kernels.ops import flash_sdpa, fused_lamb
+
+__all__ = ["flash_attention", "flash_sdpa", "fused_lamb", "lamb_update"]

@@ -1,0 +1,142 @@
+"""Flash attention (forward) — Pallas TPU kernel.
+
+Block-wise online-softmax attention: never materializes the (S, T) score
+matrix (the dominant train/prefill temp in the dry-run memory analysis).
+Grid is (batch*heads, q_blocks, kv_blocks) with the kv axis innermost; the
+running max / denominator / accumulator live in VMEM scratch and the output
+tile is written once at the last kv block.  Causal masking skips fully-masked
+kv blocks via ``pl.when`` on block indices.
+
+Block sizes default to (128, 128) q×kv tiles — MXU-aligned (128 lanes) and
+small enough that q, k, v, acc tiles fit VMEM comfortably
+(4 · 128 · head_dim · 4B ≈ 256 KiB at head_dim=128).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, block_q: int, block_k: int, kv_len: int,
+    window: int = 0,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip kv blocks entirely above the diagonal (causal) or entirely left
+    # of the sliding window — THIS is where SWA's FLOP savings come from
+    # (a dense masked softmax computes the full S×T scores regardless)
+    run = True
+    if causal:
+        run = ki * block_k <= (qi + 1) * block_q - 1
+    if window:
+        run = jnp.logical_and(
+            run, (ki + 1) * block_k - 1 > qi * block_q - window
+        )
+
+    @pl.when(run)
+    def body():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # (bq, bk)
+        if causal or window:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            ok = rows >= cols if causal else rows == rows
+            if window:
+                ok = jnp.logical_and(ok, cols > rows - window)
+            s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                     # (bq, bk)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret",
+                     "window"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, H, T, D)
+    v: jnp.ndarray,  # (B, H, T, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    window: int = 0,   # sliding-window size; 0 = full attention
+) -> jnp.ndarray:
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    if s % block_q or t % block_k:
+        raise ValueError(f"seq lens ({s},{t}) must divide blocks ({block_q},{block_k})")
+
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, t, d)
+    vf = v.reshape(bh, t, d)
+
+    grid = (bh, s // block_q, t // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal,
+            block_q=block_q, block_k=block_k, kv_len=t, window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # denominator l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,172 @@
+"""Fused LAMB update — Pallas TPU kernel.
+
+The optimizer step is HBM-bandwidth bound: naively expressed in XLA it makes
+~11 full passes over model-sized arrays (m/v EMA updates, bias correction,
+ratio, weight decay, two norm reductions, apply), and the global norm
+reductions split the fusion.  This kernel does it in two structured passes of
+VPU-aligned (1, BLOCK) tiles over the flattened (layers, P) view:
+
+  pass A (``_moments_kernel``): read g, x, m, v → write m', v' and per-block
+      partial sums of ‖x‖² and ‖u‖² (u = r + wd·x recomputed from m', v').
+  (host) per-layer trust ratio = phi(‖x‖)/‖u‖.
+  pass B (``_apply_kernel``): read x, m', v' + ratio → write x' (u recomputed;
+      cheaper than writing a param-sized u temp in pass A).
+
+Total traffic ≈ 10 N  vs ≈ 21 N unfused.  The stacked-layers axis is grid
+dim 0, giving exact per-layer (scan-aware) trust ratios.  Padding tokens are
+zeros in all four arrays, making every derived quantity zero — no masks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8 * 1024  # lanes-aligned (8·128 | 8192 f32 = 32 KiB / operand)
+
+
+def _moments_kernel(
+    c_ref, x_ref, g_ref, m_ref, v_ref,
+    m_out, v_out, xsq_out, usq_out,
+    *, b1: float, b2: float, eps: float, wd: float,
+):
+    c1 = c_ref[0, 0]
+    c2 = c_ref[0, 1]
+    g = g_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    m_out[...] = m_new
+    v_out[...] = v_new
+    r = (m_new * c1) / (jnp.sqrt(v_new * c2) + eps)
+    u = r + wd * x
+    xsq_out[0, 0] = jnp.sum(x * x)
+    usq_out[0, 0] = jnp.sum(u * u)
+
+
+def _apply_kernel(
+    c_ref, ratio_ref, x_ref, m_ref, v_ref, x_out,
+    *, eps: float, wd: float, lr: float,
+):
+    c1 = c_ref[0, 0]
+    c2 = c_ref[0, 1]
+    x = x_ref[...].astype(jnp.float32)
+    r = (m_ref[...] * c1) / (jnp.sqrt(v_ref[...] * c2) + eps)
+    u = r + wd * x
+    x_out[...] = (x - lr * ratio_ref[0, 0] * u).astype(x_out.dtype)
+
+
+def _pad_flat(a: jnp.ndarray, layers: int, p_pad: int) -> jnp.ndarray:
+    flat = a.reshape(layers, -1)
+    pad = p_pad - flat.shape[1]
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b1", "b2", "eps", "weight_decay", "lr", "phi_lo", "phi_hi",
+        "layer_axis", "block", "interpret", "apply_trust",
+    ),
+)
+def lamb_update(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    step: jnp.ndarray,
+    lr_t: Optional[jnp.ndarray] = None,  # traced LR (schedules); multiplies `lr`
+    *,
+    lr: float = 1.0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    phi_lo: Optional[float] = None,
+    phi_hi: Optional[float] = None,
+    layer_axis: Optional[int] = None,
+    apply_trust: bool = True,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused LAMB step on one tensor.  Returns (x', m', v').
+
+    ``step`` is the 1-based iteration (traced scalar); betas/lr are static.
+    ``layer_axis`` must be 0 or None (stacks put layers first by convention).
+    """
+    if layer_axis not in (None, -1, 0):
+        raise ValueError("lamb_update supports layer_axis in {None, 0}")
+    stacked = layer_axis == 0
+    layers = x.shape[0] if stacked else 1
+    per_layer = x.size // layers
+    blk = min(block, max(pl.next_power_of_2(per_layer), 128))
+    p_pad = pl.cdiv(per_layer, blk) * blk
+    nb = p_pad // blk
+
+    orig_shape, orig_dtype = x.shape, x.dtype
+    xf = _pad_flat(x, layers, p_pad)
+    gf = _pad_flat(g, layers, p_pad)
+    mf = _pad_flat(m.astype(jnp.float32), layers, p_pad)
+    vf = _pad_flat(v.astype(jnp.float32), layers, p_pad)
+
+    t = step.astype(jnp.float32)
+    c = jnp.stack([1.0 / (1.0 - b1**t), 1.0 / (1.0 - b2**t)]).reshape(1, 2)
+
+    tile = pl.BlockSpec((1, blk), lambda l, i: (l, i))
+    cell = pl.BlockSpec((1, 1), lambda l, i: (l, i))
+    scal = pl.BlockSpec((1, 2), lambda l, i: (0, 0))
+
+    m_new, v_new, xsq, usq = pl.pallas_call(
+        functools.partial(
+            _moments_kernel, b1=b1, b2=b2, eps=eps, wd=weight_decay
+        ),
+        grid=(layers, nb),
+        in_specs=[scal, tile, tile, tile, tile],
+        out_specs=[tile, tile, cell, cell],
+        out_shape=[
+            jax.ShapeDtypeStruct((layers, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((layers, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((layers, nb), jnp.float32),
+            jax.ShapeDtypeStruct((layers, nb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c, xf, gf, mf, vf)
+
+    w_norm = jnp.sqrt(jnp.sum(xsq, axis=1))
+    u_norm = jnp.sqrt(jnp.sum(usq, axis=1))
+    if phi_lo is not None or phi_hi is not None:
+        w_norm = jnp.clip(
+            w_norm,
+            phi_lo if phi_lo is not None else 0.0,
+            phi_hi if phi_hi is not None else jnp.inf,
+        )
+    ratio = jnp.where(w_norm > 0, jnp.where(u_norm > 0, w_norm / u_norm, 1.0), 1.0)
+    if not apply_trust:
+        ratio = jnp.ones_like(ratio)
+    if lr_t is not None:
+        ratio = ratio * lr_t.astype(jnp.float32)
+    ratio = ratio.reshape(layers, 1)
+
+    rcell = pl.BlockSpec((1, 1), lambda l, i: (l, 0))
+    x_new = pl.pallas_call(
+        functools.partial(_apply_kernel, eps=eps, wd=weight_decay, lr=lr),
+        grid=(layers, nb),
+        in_specs=[scal, rcell, tile, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((layers, p_pad), orig_dtype),
+        interpret=interpret,
+    )(c, ratio, xf, m_new, v_new)
+
+    def unflat(a, dtype):
+        return a[:, :per_layer].reshape(orig_shape).astype(dtype)
+
+    return (
+        unflat(x_new, orig_dtype),
+        unflat(m_new, jnp.float32),
+        unflat(v_new, jnp.float32),
+    )

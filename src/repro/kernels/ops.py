@@ -1,0 +1,135 @@
+"""jit'd wrappers around the Pallas kernels + optimizer/model integration.
+
+``fused_lamb`` is a drop-in GradientTransformation equivalent to
+``repro.core.lamb`` (tested for exact agreement) but whose per-leaf update is
+the fused two-pass Pallas kernel — the beyond-paper bandwidth optimization
+for the optimizer step (§Perf).
+
+``flash_sdpa`` adapts the flash-attention kernel to the model layout
+(B, S, H, D) with GQA head expansion, for TPU prefill/train paths.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lamb_update import lamb_update
+from repro.optim.base import GradientTransformation, ScalarOrSchedule
+
+
+class FusedLambState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def fused_lamb(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    *,
+    wd_mask: Optional[Any] = None,
+    trust_mask: Optional[Any] = None,
+    layer_axes: Optional[Any] = None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    interpret: bool = False,
+) -> GradientTransformation:
+    """LAMB with the fused Pallas update kernel (per parameter leaf)."""
+
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params
+        )
+        return FusedLambState(jnp.zeros([], jnp.int32), zeros(), zeros())
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("fused_lamb requires params")
+        count = state.count + 1
+        lr_t = (
+            learning_rate(state.count)
+            if callable(learning_rate)
+            else jnp.asarray(learning_rate)
+        )
+
+        la = layer_axes
+        if la is None:
+            la = jax.tree.map(lambda _: -1, grads)
+        else:
+            la = jax.tree.map(
+                lambda a: -1 if a is None else a, la,
+                is_leaf=lambda x: x is None or isinstance(x, int),
+            )
+        wm = wd_mask if wd_mask is not None else jax.tree.map(lambda _: True, grads)
+        tm = (
+            trust_mask
+            if trust_mask is not None
+            else jax.tree.map(lambda _: True, grads)
+        )
+
+        new_params, new_mu, new_nu = {}, {}, {}
+        flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+        treedef = jax.tree_util.tree_structure(grads)
+        p_l, g_l = jax.tree.leaves(params), jax.tree.leaves(grads)
+        m_l, v_l = jax.tree.leaves(state.mu), jax.tree.leaves(state.nu)
+        la_l, wm_l, tm_l = jax.tree.leaves(la), jax.tree.leaves(wm), jax.tree.leaves(tm)
+
+        xs, ms, vs = [], [], []
+        for p, g, m, v, axis, wd_on, tr_on in zip(
+            p_l, g_l, m_l, v_l, la_l, wm_l, tm_l
+        ):
+            axis = 0 if axis == 0 else None
+            x2, m2, v2 = lamb_update(
+                p, g, m, v, count, lr_t,
+                lr=1.0, b1=b1, b2=b2, eps=eps,
+                weight_decay=weight_decay if wd_on else 0.0,
+                phi_lo=None if phi_bounds is None else phi_bounds[0],
+                phi_hi=None if phi_bounds is None else phi_bounds[1],
+                layer_axis=axis, apply_trust=bool(tr_on),
+                interpret=interpret,
+            )
+            xs.append(x2)
+            ms.append(m2)
+            vs.append(v2)
+
+        new_params = jax.tree_util.tree_unflatten(treedef, xs)
+        new_state = FusedLambState(
+            count,
+            jax.tree_util.tree_unflatten(treedef, ms),
+            jax.tree_util.tree_unflatten(treedef, vs),
+        )
+        # Return *updates* (delta) so apply_updates composes like other opts.
+        updates = jax.tree.map(
+            lambda new, old: (new.astype(jnp.float32) - old.astype(jnp.float32)).astype(old.dtype),
+            new_params, params,
+        )
+        return updates, new_state
+
+    return GradientTransformation(init, update)
+
+
+def flash_sdpa(
+    q: jnp.ndarray,  # (B, S, H, D)  model layout
+    k: jnp.ndarray,  # (B, T, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Flash attention on the model's (B, S, H, D) layout with GQA."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if h != hkv:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

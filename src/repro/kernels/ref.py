@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lamb_update_ref(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    step: int = 1,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    layer_axis: Optional[int] = None,
+    apply_trust: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One LAMB step on a single tensor.  Returns (x', m', v').
+
+    layer_axis: stacked-layers axis → per-slice trust ratios (scan-aware).
+    """
+    x32, g32 = x.astype(jnp.float32), g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g32
+    v_new = b2 * v + (1 - b2) * g32 * g32
+    c1 = 1.0 / (1.0 - b1**step)
+    c2 = 1.0 / (1.0 - b2**step)
+    r = (m_new * c1) / (jnp.sqrt(v_new * c2) + eps)
+    u = r + weight_decay * x32
+
+    if layer_axis is None or layer_axis < 0:
+        axes = tuple(range(x.ndim))
+        keep = False
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != layer_axis)
+        keep = True
+    w_norm = jnp.sqrt(jnp.sum(x32 * x32, axis=axes, keepdims=keep))
+    u_norm = jnp.sqrt(jnp.sum(u * u, axis=axes, keepdims=keep))
+    if phi_bounds is not None:
+        w_norm = jnp.clip(w_norm, phi_bounds[0], phi_bounds[1])
+    ratio = jnp.where(w_norm > 0, jnp.where(u_norm > 0, w_norm / u_norm, 1.0), 1.0)
+    if not apply_trust:
+        ratio = jnp.ones_like(ratio)
+    x_new = x32 - lr * ratio * u
+    return x_new.astype(x.dtype), m_new, v_new
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, H, T, D)
+    v: jnp.ndarray,  # (B, H, T, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    window: int = 0,
+) -> jnp.ndarray:
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    sq, tk = q.shape[2], k.shape[2]
+    rows = jnp.arange(sq)[:, None] + (tk - sq)
+    cols = jnp.arange(tk)[None, :]
+    mask = jnp.ones((sq, tk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    if causal or window:
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)

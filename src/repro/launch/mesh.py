@@ -1,0 +1,31 @@
+"""Production mesh definitions (TPU v5e).
+
+single pod : (data=16, model=16)           = 256 chips
+multi-pod  : (pod=2, data=16, model=16)    = 512 chips
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,156 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs / peak_FLOPs_per_chip          [s]
+    memory     = HLO_bytes / HBM_bw_per_chip              [s]
+    collective = collective_bytes / link_bw_per_chip      [s]
+
+``compiled.cost_analysis()`` is already *per-device* after SPMD partitioning,
+so the per-chip peak constants divide directly (no extra /chips).
+collective_bytes is parsed from the post-partitioning HLO text: the sum of
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (also per-device).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Matches "<name> = <result-shapes> <collective>(" including async "-start"
+# forms; "-done" ops are deliberately NOT matched (they would double count).
+# Compiled HLO prints operands by %name only, so bytes are derived from the
+# RESULT shape + the replica group size, per collective kind:
+#   all-reduce:         operand == result
+#   all-gather:         operand == result / group_size
+#   reduce-scatter:     operand == result * group_size
+#   all-to-all:         operand == result
+#   collective-permute: operand == result
+_LINE_RE = re.compile(
+    r"=\s*(.*?)\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form: replica_groups=[n_groups,group_size]<=[...]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit list: count members of the first group
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes, parsed from (partitioned) HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(2)
+        result_bytes = sum(
+            _nbytes(dt, dims) for dt, dims in _SHAPE_RE.findall(m.group(1))
+        )
+        g = _group_size(line)
+        if kind == "all-gather":
+            nbytes = result_bytes // g
+        elif kind == "reduce-scatter":
+            nbytes = result_bytes * g
+        else:
+            nbytes = result_bytes
+        out[kind] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_fraction: float
+    collectives: Dict[str, int]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+    def summary(self) -> str:
+        return (
+            f"compute {self.compute_s*1e3:9.3f} ms | memory {self.memory_s*1e3:9.3f} ms"
+            f" | collective {self.collective_s*1e3:9.3f} ms → {self.dominant}-bound"
+            f" | useful-FLOP frac {self.useful_fraction:6.3f}"
+        )
+
+
+def analyze(
+    cost: dict,
+    hlo_text: str,
+    *,
+    model_flops_per_device: float,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    colls = collective_bytes(hlo_text)
+    cb = float(colls["total"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = cb / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=cb,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        dominant=dominant,
+        model_flops=model_flops_per_device,
+        useful_fraction=(model_flops_per_device / flops) if flops else 0.0,
+        collectives=colls,
+    )
+
+
+def model_flops(kind: str, n_active_params: int, tokens: int) -> float:
+    """MODEL_FLOPS: 6·N·D for training (fwd+bwd), 2·N·D for inference fwd."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

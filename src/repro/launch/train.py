@@ -1,0 +1,97 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --batch 16 --seq 128 --optimizer lamb [--smoke] \
+        [--mixed-batch] [--checkpoint-dir ckpt/] [--model-parallel 2]
+
+``--smoke`` swaps in the reduced config of the same family (CPU-runnable);
+the full configs are exercised via the dry-run (repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import core
+from repro.configs import get_config, smoke_config
+from repro.configs.base import TrainConfig
+from repro.core.mixed_batch import make_stage
+from repro.data import DataPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.sharding.context import ShardCtx
+from repro.train import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--optimizer", default="lamb")
+    ap.add_argument("--base-lr", type=float, default=2.5e-3)
+    ap.add_argument("--base-batch", type=int, default=16)
+    ap.add_argument("--warmup-ratio", type=float, default=1 / 40)
+    ap.add_argument("--weight-decay", type=float, default=0.01)
+    ap.add_argument("--mixed-batch", action="store_true",
+                    help="two-stage §4.1 recipe (seq -> 4*seq, batch -> batch/4)")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M "
+          f"active={model.active_param_count()/1e6:.1f}M")
+
+    shard_ctx = None
+    if args.model_parallel > 1 or len(jax.devices()) > 1:
+        shard_ctx = ShardCtx(make_host_mesh(args.model_parallel))
+
+    lr = core.sqrt_scaled_lr(args.base_lr, args.base_batch, args.batch)
+    warmup_ratio = core.linear_epoch_warmup_ratio(
+        args.warmup_ratio, args.base_batch, args.batch
+    )
+    tc = TrainConfig(
+        optimizer=args.optimizer, learning_rate=lr,
+        weight_decay=args.weight_decay, total_steps=args.steps, seed=args.seed,
+    )
+    trainer = Trainer(
+        model, tc,
+        schedule=core.warmup_poly_decay(
+            lr, args.steps, int(args.steps * warmup_ratio)),
+        shard_ctx=shard_ctx,
+        checkpoint_dir=args.checkpoint_dir or None,
+        checkpoint_every=args.checkpoint_every,
+        log_every=args.log_every,
+    )
+
+    if args.mixed_batch:
+        stages = [
+            make_stage("stage1", args.seq, args.batch,
+                       int(args.steps * 0.8), base_lr=args.base_lr,
+                       base_batch=args.base_batch,
+                       base_warmup_ratio=args.warmup_ratio),
+            make_stage("stage2_rewarmup", args.seq * 4, max(args.batch // 4, 1),
+                       args.steps - int(args.steps * 0.8),
+                       base_lr=args.base_lr, base_batch=args.base_batch,
+                       base_warmup_ratio=args.warmup_ratio),
+        ]
+        trainer.fit_stages(stages, data_seed=args.seed)
+    else:
+        data = DataPipeline(cfg, args.batch, args.seq, seed=args.seed)
+        trainer.fit(data, args.steps)
+
+    final = trainer.history[-1] if trainer.history else {}
+    print(f"done: step={final.get('step')} loss={final.get('loss/total'):.4f} "
+          f"acc={final.get('accuracy', 0.0):.4f}")
+
+
+if __name__ == "__main__":
+    main()

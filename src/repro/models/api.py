@@ -1,0 +1,168 @@
+"""Uniform model API over all architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+  defs / init / abstract_params       — parameter trees
+  apply(params, batch)                — logits for train/encoder forward
+  prefill(params, batch, cache)       — logits + populated cache
+  decode(params, batch, cache)        — one-token step
+  make_cache(batch, len, abstract=)   — per-family cache pytree
+  input_specs(shape)                  — ShapeDtypeStruct inputs for the
+                                        dry-run (tokens / prefix embeddings)
+  optimizer metadata                  — wd/trust masks, layer axes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import hybrid, transformer, xlstm_model
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    defs: Any
+    forward_fn: Callable
+    cache_fn: Callable
+
+    # ---- params ----
+    def init(self, rng) -> Any:
+        params = nn.init_params(self.defs, rng)
+        return nn.cast_tree(params, jnp.dtype(self.cfg.param_dtype))
+
+    def abstract_params(self):
+        tree = nn.abstract_params(self.defs)
+        dt = jnp.dtype(self.cfg.param_dtype)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dt)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s,
+            tree,
+        )
+
+    # ---- optimizer metadata ----
+    def wd_mask(self):
+        return nn.weight_decay_mask(self.defs)
+
+    def trust_mask(self):
+        return nn.trust_ratio_mask(self.defs)
+
+    def layer_axes(self):
+        if self.cfg.lamb_granularity == "leaf":
+            return jax.tree.map(lambda _: -1, nn.layer_axis_tree(self.defs))
+        return nn.layer_axis_tree(self.defs)
+
+    # ---- compute ----
+    def apply(self, params, batch, **kw):
+        logits, _, aux = self.forward_fn(params, batch, self.cfg, **kw)
+        return logits, aux
+
+    def prefill(self, params, batch, cache, **kw):
+        logits, new_cache, _ = self.forward_fn(
+            params, batch, self.cfg, caches=cache, decode=False, **kw
+        )
+        return logits, new_cache
+
+    def decode(self, params, batch, cache, positions, **kw):
+        logits, new_cache, _ = self.forward_fn(
+            params, batch, self.cfg, caches=cache, decode=True,
+            positions=positions, **kw
+        )
+        return logits, new_cache
+
+    def make_cache(self, batch: int, max_len: int, *, abstract: bool = False):
+        import jax.numpy as _jnp
+
+        return self.cache_fn(
+            self.cfg, batch, max_len, abstract=abstract,
+            dtype=_jnp.dtype(self.cfg.activation_dtype),
+        )
+
+    # ---- dry-run inputs ----
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        return input_specs(self.cfg, shape)
+
+    def param_count(self) -> int:
+        return nn.param_count(self.defs)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top-k experts + non-MoE)."""
+        cfg = self.cfg
+        total = nn.param_count(self.defs)
+        if cfg.n_experts == 0:
+            return total
+
+        # count routed-expert leaves (axes contain "experts"), scale by k/E
+        routed = 0
+        for leaf in jax.tree.leaves(self.defs, is_leaf=nn.is_param):
+            if "experts" in leaf.axes:
+                n = 1
+                for d in leaf.shape:
+                    n *= d
+                routed += n
+        active_frac = cfg.n_experts_per_tok / cfg.n_experts
+        return int(total - routed + routed * active_frac)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "hybrid":
+        return Model(cfg, hybrid.hybrid_defs(cfg), hybrid.forward, hybrid.make_cache)
+    if cfg.family == "ssm":
+        return Model(
+            cfg, xlstm_model.xlstm_defs(cfg), xlstm_model.forward,
+            xlstm_model.make_cache,
+        )
+    # dense / moe / vlm / audio share the unified transformer
+    return Model(
+        cfg, transformer.transformer_defs(cfg), transformer.forward,
+        transformer.make_cache,
+    )
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    train:   {tokens, labels} (+ modality stubs)
+    prefill: {tokens} (+ stubs)
+    decode:  {tokens:(B,1)}; the cache is supplied separately.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    d = cfg.d_model
+    act = jnp.dtype(cfg.activation_dtype)
+
+    if cfg.frontend == "audio_stub":
+        specs = {
+            "frame_embeds": jax.ShapeDtypeStruct((b, s, d), act),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    if cfg.frontend == "vision_stub":
+        n_img = cfg.n_prefix_tokens
+        s_text = s - n_img
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s_text), i32),
+            "image_embeds": jax.ShapeDtypeStruct((b, n_img, d), act),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return specs

@@ -1,0 +1,178 @@
+"""Jamba-style hybrid model: Mamba + attention interleaved 7:1, MoE every
+other layer (arXiv:2403.19887).
+
+The 8-layer period is the scan unit: layers inside a period are heterogeneous
+(one attention layer, the rest mamba; alternating MoE/MLP FFNs) so the period
+body unrolls its 8 sub-layers while ``lax.scan`` runs over the 9 periods.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.layers.attention import (
+    abstract_kv_cache,
+    attention,
+    attention_defs,
+    init_kv_cache,
+)
+from repro.models.layers.embeddings import embed, embed_defs, unembed, unembed_defs
+from repro.models.layers.mamba import (
+    abstract_mamba_state,
+    init_mamba_state,
+    mamba,
+    mamba_defs,
+)
+from repro.models.layers.mlp import mlp, mlp_defs
+from repro.models.layers.moe import moe, moe_defs
+from repro.models.layers.norms import apply_norm, norm_defs
+
+
+def _attn_index(cfg: ModelConfig) -> int:
+    # place the attention layer mid-period (Jamba: 1 attn per 8 layers)
+    return cfg.attn_period // 2
+
+
+def _is_moe_layer(cfg: ModelConfig, i: int) -> bool:
+    return cfg.n_experts > 0 and (i % cfg.moe_period_in_block == 1)
+
+
+def _period_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    period: Dict[str, Any] = {}
+    for i in range(cfg.attn_period):
+        sub = {
+            "ln1": norm_defs(d, cfg.norm_type),
+            "ln2": norm_defs(d, cfg.norm_type),
+            "mixer": attention_defs(cfg) if i == _attn_index(cfg) else mamba_defs(cfg),
+        }
+        if _is_moe_layer(cfg, i):
+            sub["ffn_moe"] = moe_defs(cfg)
+        else:
+            sub["ffn"] = mlp_defs(d, cfg.d_ff, cfg.gated_mlp)
+        period[f"sub{i}"] = sub
+    return period
+
+
+def hybrid_defs(cfg: ModelConfig) -> dict:
+    n_groups = cfg.n_layers // cfg.attn_period
+    return {
+        "embed": embed_defs(cfg.vocab_size, cfg.d_model),
+        "groups": nn.stack(_period_defs(cfg), n_groups),
+        "final_norm": norm_defs(cfg.d_model, cfg.norm_type),
+        "unembed": unembed_defs(cfg.d_model, cfg.vocab_size),
+    }
+
+
+def forward(
+    params: dict,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    caches: Optional[dict] = None,
+    decode: bool = False,
+    positions: Optional[jnp.ndarray] = None,
+    mamba_chunk: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
+    if mamba_chunk is None:
+        mamba_chunk = cfg.mamba_chunk
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = embed(params["embed"], batch["tokens"], dtype)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    attn_i = _attn_index(cfg)
+
+    def body(carry, xs):
+        xc = carry
+        gp, gcache = xs
+        new_gcache: Dict[str, Any] = {}
+        aux_acc: Dict[str, jnp.ndarray] = {}
+        for i in range(cfg.attn_period):
+            sub = gp[f"sub{i}"]
+            key = f"sub{i}"
+            h = apply_norm(sub["ln1"], xc, cfg.norm_type)
+            if i == attn_i:
+                out, nc = attention(
+                    sub["mixer"], h, positions, cfg,
+                    cache=(gcache or {}).get(key), decode=decode,
+                )
+            else:
+                out, nc = mamba(
+                    sub["mixer"], h, cfg,
+                    state=(gcache or {}).get(key), decode=decode,
+                    chunk=mamba_chunk,
+                )
+            if gcache is not None:
+                new_gcache[key] = nc
+            xc = xc + out
+            h = apply_norm(sub["ln2"], xc, cfg.norm_type)
+            if "ffn_moe" in sub:
+                out, aux = moe(sub["ffn_moe"], h, cfg)
+                for k, v in aux.items():
+                    aux_acc[k] = aux_acc.get(k, 0.0) + v
+            else:
+                out = mlp(sub["ffn"], h, cfg)
+            xc = xc + out
+        return xc, (new_gcache if gcache is not None else None, aux_acc)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(params["groups"])[0].shape[0]
+        ys = []
+        for i in range(n):
+            gp = jax.tree.map(lambda a: a[i], params["groups"])
+            ci = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            x, y = body(x, (gp, ci))
+            ys.append(y)
+        new_caches = (
+            None if caches is None
+            else jax.tree.map(lambda *a: jnp.stack(a), *[y[0] for y in ys])
+        )
+        auxs = (
+            {k: jnp.stack([y[1][k] for y in ys]) for k in ys[0][1]}
+            if ys and ys[0][1] else {}
+        )
+    else:
+        x, (new_caches, auxs) = jax.lax.scan(body, x, (params["groups"], caches))
+    aux = {k: jnp.mean(v) for k, v in auxs.items()}
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = unembed(x, params["unembed"])
+    return logits, new_caches, aux
+
+
+def make_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, abstract: bool, dtype=jnp.bfloat16
+) -> dict:
+    n_groups = cfg.n_layers // cfg.attn_period
+    attn_i = _attn_index(cfg)
+    group: Dict[str, Any] = {}
+    for i in range(cfg.attn_period):
+        key = f"sub{i}"
+        if i == attn_i:
+            group[key] = (
+                abstract_kv_cache(batch, max_len, cfg, dtype)
+                if abstract
+                else init_kv_cache(batch, max_len, cfg, dtype)
+            )
+        else:
+            group[key] = (
+                abstract_mamba_state(batch, cfg, dtype)
+                if abstract
+                else init_mamba_state(batch, cfg, dtype)
+            )
+    if abstract:
+        return jax.tree.map(
+            lambda sds: jax.ShapeDtypeStruct((n_groups,) + sds.shape, sds.dtype), group
+        )
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(), group
+    )

@@ -1,0 +1,193 @@
+"""Multi-head attention: MHA / GQA / MQA, causal / bidirectional / sliding
+window, with a fixed-size KV cache for decode.
+
+Layout conventions
+  activations: (B, S, D_model)
+  q:           (B, S, H, Dh)      grouped as (B, S, Hkv, G, Dh) for GQA
+  kv cache:    {"k": (B, T, Hkv, Dh), "v": (B, T, Hkv, Dh)}  (T = max length)
+
+Decode is a single-token step: write (k,v) at position `index`, attend over
+the whole cache under a length/window mask — O(T) per token (linear, the
+sub-quadratic decode path).  Prefill computes full attention and returns the
+populated cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.layers.embeddings import apply_rope
+from repro.sharding import shard_act
+
+NEG_INF = -1e9
+
+
+def attention_defs(cfg: ModelConfig) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": nn.Param((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": nn.Param((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": nn.Param((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": nn.Param((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_qkv_bias:
+        defs["bq"] = nn.Param((h, dh), ("heads", "head_dim"), init="zeros",
+                              no_weight_decay=True, no_trust_ratio=True)
+        defs["bk"] = nn.Param((hkv, dh), ("kv_heads", "head_dim"), init="zeros",
+                              no_weight_decay=True, no_trust_ratio=True)
+        defs["bv"] = nn.Param((hkv, dh), ("kv_heads", "head_dim"), init="zeros",
+                              no_weight_decay=True, no_trust_ratio=True)
+    return defs
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,      # (B, S) int32 — absolute positions of queries
+    kv_pos: jnp.ndarray,     # (T,)  int32 — absolute positions of keys
+    kv_valid_len: Optional[jnp.ndarray],  # scalar/(B,) — #valid cache slots
+    *,
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """(B, 1, S, T) additive mask bias in fp32."""
+    q = q_pos[:, :, None]          # (B, S, 1)
+    k = kv_pos[None, None, :]      # (1, 1, T)
+    ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= k > q - window
+    if kv_valid_len is not None:
+        valid = jnp.asarray(kv_valid_len)
+        valid = valid[:, None, None] if valid.ndim == 1 else valid
+        ok &= k < valid
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+
+
+def _sdpa(
+    q: jnp.ndarray,  # (B, S, H, Dh)
+    k: jnp.ndarray,  # (B, T, Hkv, Dh)
+    v: jnp.ndarray,  # (B, T, Hkv, Dh)
+    bias: jnp.ndarray,  # (B, 1, S, T)
+    n_kv_heads: int,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    g = h // n_kv_heads
+    qg = q.reshape(b, s, n_kv_heads, g, dh)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k) / jnp.sqrt(dh).astype(q.dtype)
+    scores = scores.astype(jnp.float32)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = scores + bias[:, :, None]  # (B, Hkv, G, S, T) + (B, 1, 1, S, T)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def attention(
+    p: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    decode: bool = False,
+    window: Optional[int] = "cfg",
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full attention block (projections + SDPA + output projection).
+
+    Modes:
+      train/encoder: cache=None, decode=False
+      prefill:       cache=zeros cache, decode=False → returns filled cache
+      decode:        cache=filled, decode=True, x is (B, 1, D); positions (B,1)
+    """
+    if window == "cfg":
+        window = cfg.sliding_window
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if cfg.use_qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "kv_heads", None))
+    v = shard_act(v, ("batch", "seq", "kv_heads", None))
+
+    new_cache = None
+    if cache is not None and decode:
+        # single-token decode: scatter k,v at `index`, attend over full cache
+        idx = cache["index"]  # scalar int32: current length
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "index": idx + x.shape[1]}
+        t = ck.shape[1]
+        kv_pos = jnp.arange(t, dtype=jnp.int32)
+        bias = _mask_bias(positions, kv_pos, idx + x.shape[1],
+                          causal=True, window=window)
+        out = _sdpa(q, shard_act(ck, ("batch", "cache_seq", "kv_heads", None)),
+                    shard_act(cv, ("batch", "cache_seq", "kv_heads", None)),
+                    bias, cfg.n_kv_heads, cfg.logit_softcap)
+    else:
+        s = x.shape[1]
+        use_flash = (
+            cfg.use_flash_kernel
+            and cfg.causal
+            and window is None
+            and cfg.logit_softcap is None
+            and s % 128 == 0
+        )
+        if use_flash:
+            # Pallas flash-attention path (TPU target; interpret on CPU)
+            from repro.kernels.ops import flash_sdpa
+
+            out = flash_sdpa(
+                q, k, v, causal=True,
+                interpret=jax.default_backend() == "cpu",
+            )
+        else:
+            kv_pos = jnp.arange(s, dtype=jnp.int32)
+            bias = _mask_bias(positions, kv_pos, None,
+                              causal=cfg.causal, window=window)
+            out = _sdpa(q, k, v, bias, cfg.n_kv_heads, cfg.logit_softcap)
+        if cache is not None:  # prefill: fill cache[: s]
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv, "index": jnp.asarray(s, jnp.int32)}
+
+    out = shard_act(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return shard_act(y, ("batch", "seq", "embed")), new_cache
+
+
+def init_kv_cache(
+    batch: int, max_len: int, cfg: ModelConfig, dtype=jnp.bfloat16
+) -> dict:
+    dh = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_kv_cache(batch: int, max_len: int, cfg: ModelConfig, dtype=jnp.bfloat16):
+    dh = cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }

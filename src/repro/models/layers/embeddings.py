@@ -1,0 +1,65 @@
+"""Token embeddings, output heads and rotary position embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro import nn
+from repro.sharding import shard_act
+
+
+def embed_defs(vocab_size: int, d_model: int) -> nn.Param:
+    return nn.Param((vocab_size, d_model), ("vocab", "embed"), init="embed", scale=0.02)
+
+
+def unembed_defs(d_model: int, vocab_size: int) -> nn.Param:
+    return nn.Param((d_model, vocab_size), ("embed", "vocab"), init="fan_in")
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    x = table.astype(dtype)[tokens]
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def unembed(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,dv->bsv", x, proj.astype(x.dtype))
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+def tied_unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for half the head dim."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    *,
+    dim: Optional[int] = None,
+) -> jnp.ndarray:
+    """Rotate the first `dim` (default: all) features of x.
+
+    x: (B, S, H, D); positions: (B, S) int32.
+    """
+    d = dim or x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    angles = positions.astype(jnp.float32)[..., None] * inv  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, rest = x[..., :d], x[..., d:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = out.astype(x.dtype)
+    return jnp.concatenate([out, rest], axis=-1) if rest.shape[-1] else out

@@ -1,0 +1,170 @@
+"""Mamba (S6) selective state-space layer — used by Jamba's hybrid blocks.
+
+Training/prefill uses a parallel associative scan over the diagonal SSM
+recurrence; decode keeps O(1) recurrent state (ssm state + conv ring buffer).
+
+TPU adaptation: the CUDA "selective scan" kernel fuses the recurrence in
+SRAM; on TPU the same insight maps to ``jax.lax.associative_scan`` (log-depth,
+XLA-fused elementwise combines) — optionally *chunked* (``chunk`` argument)
+to bound the (B, S, d_inner, d_state) materialization, which is the memory
+hillclimb knob recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.sharding import shard_act
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.mamba_dt_rank or math.ceil(cfg.d_model / 16)
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    return {
+        "in_proj": nn.Param((d, 2 * di), ("embed", "inner")),
+        "conv_w": nn.Param((cfg.mamba_d_conv, di), ("conv", "inner"), init="fan_in"),
+        "conv_b": nn.Param((di,), ("inner",), init="zeros",
+                           no_weight_decay=True, no_trust_ratio=True),
+        "x_proj": nn.Param((di, r + 2 * n), ("inner", "state")),
+        "dt_proj": nn.Param((r, di), ("state", "inner")),
+        "dt_bias": nn.Param((di,), ("inner",), init="uniform_scalar", scale=0.1,
+                            no_weight_decay=True, no_trust_ratio=True),
+        # A stored as log(-A) for stability; shape (d_inner, n)
+        "A_log": nn.Param((di, n), ("inner", "state"), init="uniform_scalar",
+                          scale=1.0, no_weight_decay=True),
+        "D": nn.Param((di,), ("inner",), init="ones", no_weight_decay=True,
+                      no_trust_ratio=True),
+        "out_proj": nn.Param((di, d), ("inner", "embed")),
+    }
+
+
+def _ssm_scan(
+    a: jnp.ndarray,  # (B, S, Di, N) decay terms exp(dt*A)
+    bx: jnp.ndarray,  # (B, S, Di, N) input terms dt*B*x
+    h0: Optional[jnp.ndarray] = None,  # (B, Di, N)
+    chunk: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t * h_{t-1} + bx_t.  Returns (all h, final h)."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if chunk is None or chunk >= a.shape[1]:
+        _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        return h, h[:, -1]
+
+    # chunked: carry the final state across fixed-size chunks (memory bound
+    # by chunk instead of S)
+    b, s, di, n = a.shape
+    n_chunks = s // chunk
+    a_c = a.reshape(b, n_chunks, chunk, di, n).swapaxes(0, 1)
+    bx_c = bx.reshape(b, n_chunks, chunk, di, n).swapaxes(0, 1)
+
+    def step(carry, inp):
+        ac, bc = inp
+        bc = bc.at[:, 0].add(ac[:, 0] * carry)
+        _, h = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return h[:, -1], h
+
+    final, hs = jax.lax.scan(step, jnp.zeros((b, di, n), a.dtype), (a_c, bx_c))
+    h = hs.swapaxes(0, 1).reshape(b, s, di, n)
+    return h, final
+
+
+def mamba(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+    decode: bool = False,
+    chunk: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B, S, d).  state (decode): {"ssm": (B,Di,N), "conv": (B,dc-1,Di)}."""
+    dtype = x.dtype
+    di = cfg.mamba_expand * cfg.d_model
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    dc = cfg.mamba_d_conv
+    b, s, _ = x.shape
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard_act(xi, ("batch", "seq", "inner"))
+
+    # depthwise causal conv over time
+    if decode and state is not None:
+        hist = jnp.concatenate([state["conv"].astype(dtype), xi], axis=1)  # (B, dc-1+s, Di)
+        new_conv = hist[:, -(dc - 1):]
+        window = hist[:, -dc:]  # (B, dc, Di)
+        conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"].astype(dtype))[:, None]
+    else:
+        pad = jnp.zeros((b, dc - 1, di), dtype)
+        hist = jnp.concatenate([pad, xi], axis=1)
+        idx = jnp.arange(s)[:, None] + jnp.arange(dc)[None]
+        windows = hist[:, idx]  # (B, S, dc, Di)
+        conv = jnp.einsum("bscd,cd->bsd", windows, p["conv_w"].astype(dtype))
+        new_conv = hist[:, -(dc - 1):] if state is not None else None
+    conv = jax.nn.silu(conv + p["conv_b"].astype(dtype))
+
+    # data-dependent dt, B, C
+    dbc = jnp.einsum("bsd,dr->bsr", conv, p["x_proj"].astype(dtype))
+    dt_in, b_in, c_in = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(dtype))
+        + p["dt_bias"].astype(dtype)
+    ).astype(jnp.float32)  # (B, S, Di)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (Di, N)
+    a = jnp.exp(dt[..., None] * A)  # (B, S, Di, N)
+    bx = (dt * conv.astype(jnp.float32))[..., None] * b_in.astype(jnp.float32)[:, :, None, :]
+
+    if decode and state is not None:
+        h = a[:, 0] * state["ssm"] + bx[:, 0]  # (B, Di, N)
+        new_state = {"ssm": h, "conv": new_conv.astype(state["conv"].dtype)}
+        y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0].astype(jnp.float32))[:, None]
+    else:
+        h0 = state["ssm"] if state is not None else None
+        hs, h_final = _ssm_scan(a, bx, h0, chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, c_in.astype(jnp.float32))
+        new_state = (
+            {"ssm": h_final, "conv": new_conv.astype(state["conv"].dtype)}
+            if state is not None
+            else None
+        )
+
+    y = (y + conv.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(dtype))
+    return shard_act(out, ("batch", "seq", "embed")), new_state
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+    }
+
+
+def abstract_mamba_state(batch: int, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.mamba_d_conv - 1, di), dtype),
+    }

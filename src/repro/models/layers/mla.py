@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are projected through low-rank latents; only the
+compressed KV latent (kv_lora_rank) and the shared rope key (qk_rope_dim) are
+cached for decode — the cache is ~(512+64) floats/token instead of
+2*H*Dh = 2*128*192.
+
+Two decode paths:
+  * naive (baseline): reconstruct per-head K/V for every cached token each
+    step — faithful to the algebra but materializes (B, T, H, Dh).
+  * absorbed (``cfg.mla_absorb``, beyond-paper §Perf optimization): fold
+    W_uk into the query and W_uv into the output projection so attention runs
+    directly in the latent space; the (B, T, H, Dh) blow-up never exists.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.layers.embeddings import apply_rope
+from repro.sharding import shard_act
+
+NEG_INF = -1e9
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": nn.Param((d, qr), ("embed", "q_lora")),
+        "q_norm": nn.Param((qr,), ("q_lora",), init="ones",
+                           no_weight_decay=True, no_trust_ratio=True),
+        "wq_b": nn.Param((qr, h, dn + dr), ("q_lora", "heads", "qk_dim")),
+        "wkv_a": nn.Param((d, kr + dr), ("embed", "kv_lora")),
+        "kv_norm": nn.Param((kr,), ("kv_lora",), init="ones",
+                            no_weight_decay=True, no_trust_ratio=True),
+        "wk_b": nn.Param((kr, h, dn), ("kv_lora", "heads", "qk_dim")),
+        "wv_b": nn.Param((kr, h, dv), ("kv_lora", "heads", "v_dim")),
+        "wo": nn.Param((h, dv, d), ("heads", "v_dim", "embed")),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 / jnp.sqrt(jnp.mean(x32**2, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _latents(p, x, positions, cfg):
+    """Shared projections → (q_nope, q_rope, c_kv, k_rope)."""
+    dtype = x.dtype
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dtype)), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dtype))
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = _rms(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mask(positions, t, valid_len):
+    kv_pos = jnp.arange(t, dtype=jnp.int32)[None, None, :]
+    q = positions[:, :, None]
+    ok = kv_pos <= q
+    if valid_len is not None:
+        ok &= kv_pos < valid_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None]  # (B,1,S,T)
+
+
+def mla_attention(
+    p: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    dtype = x.dtype
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / jnp.sqrt(dn + dr).astype(jnp.float32)
+
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, positions, cfg)
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"] if decode else jnp.asarray(0, jnp.int32)
+        ckv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, idx, 0))
+        valid = idx + x.shape[1]
+        new_cache = {"c_kv": ckv, "k_rope": ckr, "index": valid}
+        kv_src, kr_src = ckv.astype(dtype), ckr.astype(dtype)
+        bias = _mask(positions, ckv.shape[1], valid)
+    else:
+        kv_src, kr_src = c_kv, k_rope
+        bias = _mask(positions, x.shape[1], None)
+
+    kv_src = shard_act(kv_src, ("batch", "cache_seq" if decode else "seq", None))
+
+    if cfg.mla_absorb:
+        # ---- absorbed path: attention in latent space -----------------
+        # q_lat[b,s,h,r] = q_nope · W_uk[h]   (fold k up-proj into query)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(dtype))
+        s_nope = jnp.einsum("bshr,btr->bhst", q_lat, kv_src)
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_src)
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale + bias
+        probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, kv_src)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, p["wv_b"].astype(dtype))
+    else:
+        # ---- naive path: materialize per-head K/V ---------------------
+        k_nope = jnp.einsum("btr,rhk->bthk", kv_src, p["wk_b"].astype(dtype))
+        v = jnp.einsum("btr,rhv->bthv", kv_src, p["wv_b"].astype(dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_src[:, :, None, :],
+                                      kr_src.shape[:2] + (h, dr))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32) * scale
+        probs = jax.nn.softmax(scores + bias, axis=-1).astype(dtype)
+        out = jnp.einsum("bhst,bthv->bshv", probs, v)
+
+    out = shard_act(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dtype))
+    return shard_act(y, ("batch", "seq", "embed")), new_cache
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: ModelConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_mla_cache(batch: int, max_len: int, cfg: ModelConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dtype),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and vanilla."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.sharding import shard_act
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_defs(d_model: int, d_ff: int, gated: bool) -> dict:
+    defs = {
+        "wi": nn.Param((d_model, d_ff), ("embed", "ff")),
+        "wo": nn.Param((d_ff, d_model), ("ff", "embed")),
+    }
+    if gated:
+        defs["wg"] = nn.Param((d_model, d_ff), ("embed", "ff"))
+    return defs
+
+
+def mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dtype = x.dtype
+    act = _act(cfg.act_fn)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard_act(h, ("batch", "seq", "ff"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+    return shard_act(y, ("batch", "seq", "embed"))

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: top-k routing with static capacity.
+
+Dispatch is scatter/gather based (O(T·k) index work, (E, C, d) expert
+buffers) rather than the GShard one-hot-einsum form whose (T, E, C) dispatch
+tensor is infeasible at 256 experts.  Expert weights are stacked on a leading
+``experts`` axis which shards over the ``model`` mesh axis (expert
+parallelism); the token scatter across expert shards lowers to the all-to-all
+family of collectives under SPMD.
+
+Routing follows the modern recipe (DeepSeek/granite): softmax router,
+top-k, gates renormalized over the selected experts, Switch-style
+load-balance auxiliary loss + optional router z-loss, optional shared
+experts that every token passes through.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.layers.mlp import _act, mlp, mlp_defs
+from repro.sharding import shard_act
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    defs = {
+        "router": nn.Param((d, e), ("embed", "experts"), init="fan_in"),
+        "wi": nn.Param((e, d, f), ("experts", "embed", "expert_ff")),
+        "wg": nn.Param((e, d, f), ("experts", "embed", "expert_ff")),
+        "wo": nn.Param((e, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = mlp_defs(d, cfg.n_shared_experts * f, gated=True)
+    return defs
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    """Static per-expert capacity: ceil(cf * T * k / E), >= k."""
+    c = int(cfg.capacity_factor * n_tokens * cfg.n_experts_per_tok / cfg.n_experts)
+    return max(c, cfg.n_experts_per_tok)
+
+
+def route(
+    logits: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Top-k gates + aux losses.  logits: (T, E) fp32."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.n_experts_per_tok)  # (T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # Switch-Transformer load-balance loss: E * <f_e * p_e>
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)  # (E,) mean router prob
+    assigned = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)  # top-1 fraction
+    fe = jnp.mean(assigned, axis=0)
+    lb = e * jnp.sum(fe * me)
+    aux = {"moe_lb_loss": lb, "moe_max_prob": jnp.max(me)}
+    if cfg.router_z_coef:
+        aux["moe_z_loss"] = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, idx, aux
+
+
+def moe(
+    p: dict, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) → (B, S, d), aux-loss dict."""
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.n_experts_per_tok, cfg.n_experts
+    c = capacity(t, cfg)
+    dtype = x.dtype
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates, idx, aux = route(logits, cfg)
+
+    # position of each (token, slot) within its expert, in flat assignment order
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                  # rank within expert
+    pos = jnp.sum(pos * onehot, axis=-1)                       # (T*k,)
+    keep = pos < c
+    dest = jnp.where(keep, flat_e * c + pos, e * c)            # OOB → dropped
+
+    token_id = jnp.repeat(jnp.arange(t), k)                    # (T*k,)
+    buf = jnp.zeros((e * c, d), dtype)
+    buf = buf.at[dest].set(xf[token_id], mode="drop")
+    buf = shard_act(buf.reshape(e, c, d), ("experts", None, "embed"))
+
+    # expert FFN (stacked einsum; experts axis sharded on model)
+    act = _act(cfg.act_fn)
+    hi = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dtype))
+    hg = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dtype))
+    h = act(hg) * hi
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))
+    y = y.reshape(e * c, d)
+
+    # combine: gather each slot's output back, weighted by its gate
+    yk = jnp.where(keep[:, None], y.at[dest, :].get(mode="fill", fill_value=0.0), 0.0)
+    out = jnp.sum(
+        (yk * gates.reshape(-1, 1).astype(dtype)).reshape(t, k, d), axis=1
+    )
+
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux["moe_drop_fraction"] = dropped
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], xf[:, None, :], cfg).reshape(t, d)
+
+    return out.reshape(b, s, d).astype(dtype), aux

@@ -1,0 +1,33 @@
+"""Normalization layers (param defs + pure applies)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import nn
+
+
+def norm_defs(d_model: int, norm_type: str) -> dict:
+    scale = nn.Param(
+        (d_model,), ("embed",), init="ones", no_weight_decay=True, no_trust_ratio=True
+    )
+    if norm_type == "layernorm":
+        bias = nn.Param(
+            (d_model,), ("embed",), init="zeros",
+            no_weight_decay=True, no_trust_ratio=True,
+        )
+        return {"scale": scale, "bias": bias}
+    return {"scale": scale}
+
+
+def apply_norm(p: dict, x: jnp.ndarray, norm_type: str, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) / jnp.sqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 / jnp.sqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)

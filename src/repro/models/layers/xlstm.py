@@ -1,0 +1,265 @@
+"""xLSTM layers (Beck et al., 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan with exponential gating).
+
+mLSTM train/prefill uses the paper's parallel (attention-like) form with
+log-gate stabilization; decode is the O(d^2) recurrent form — the matrix
+memory C (B, H, dh, dh), normalizer n and stabilizer m — which is what makes
+``long_500k`` decode O(1) in sequence length.
+
+sLSTM is inherently sequential (recurrent R_z/R_i/R_f/R_o block-diagonal per
+head); it runs as a ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.sharding import shard_act
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    up = int(cfg.xlstm_proj_factor * d)
+    dh_up = up // h
+    return {
+        "up_proj": nn.Param((d, 2 * up), ("embed", "inner")),
+        "wq": nn.Param((up, h, dh_up), ("inner", "heads", "head_dim")),
+        "wk": nn.Param((up, h, dh_up), ("inner", "heads", "head_dim")),
+        "wv": nn.Param((up, h, dh_up), ("inner", "heads", "head_dim")),
+        "w_igate": nn.Param((up, h), ("inner", "heads"), init="zeros"),
+        "b_igate": nn.Param((h,), ("heads",), init="zeros",
+                            no_weight_decay=True, no_trust_ratio=True),
+        "w_fgate": nn.Param((up, h), ("inner", "heads"), init="zeros"),
+        "b_fgate": nn.Param((h,), ("heads",), init="ones", scale=3.0,
+                            no_weight_decay=True, no_trust_ratio=True),
+        "out_norm": nn.Param((up,), ("inner",), init="ones",
+                             no_weight_decay=True, no_trust_ratio=True),
+        "down_proj": nn.Param((up, d), ("inner", "embed")),
+    }
+
+
+def mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Parallel mLSTM (paper eq. 25-27).
+
+    q,k,v: (B, H, S, Dh);  i_pre, f_pre: (B, H, S) pre-activations.
+    """
+    s = q.shape[2]
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))      # (B,H,S)
+    F = jnp.cumsum(log_f, axis=-1)                              # sum_{j<=t} log f_j
+    # D[t, s] = F[t] - F[s] + i_pre[s]  for s <= t
+    D = F[..., :, None] - F[..., None, :] + i_pre.astype(jnp.float32)[..., None, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    D = jnp.where(causal, D, NEG_INF)
+    m = jnp.max(D, axis=-1, keepdims=True)                      # (B,H,S,1)
+    W = jnp.exp(D - m)
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) / jnp.sqrt(dh)
+    C = scores * W
+    norm = jnp.maximum(jnp.abs(jnp.sum(C, axis=-1, keepdims=True)), jnp.exp(-m))
+    weights = (C / norm).astype(q.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", weights, v)
+
+
+def mlstm_recurrent_step(state: dict, q, k, v, i_pre, f_pre):
+    """One decode step.  q,k,v: (B, H, Dh); gates: (B, H)."""
+    c, n, m = state["c"], state["n"], state["m"]  # (B,H,Dh,Dh),(B,H,Dh),(B,H)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i32 = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, i32)
+    f_eff = jnp.exp(log_f + m - m_new)[..., None]
+    i_eff = jnp.exp(i32 - m_new)[..., None]
+    k32, v32, q32 = (a.astype(jnp.float32) for a in (k, v, q))
+    dh = q.shape[-1]
+    k32 = k32 / jnp.sqrt(dh)
+    c_new = f_eff[..., None] * c + i_eff[..., None] * v32[..., :, None] * k32[..., None, :]
+    n_new = f_eff * n + i_eff * k32
+    num = jnp.einsum("bhde,bhe->bhd", c_new, q32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q32)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return {"c": c_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_block(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    dtype = x.dtype
+    h_heads = cfg.n_heads
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard_act(xi, ("batch", "seq", "inner"))
+    b, s, up = xi.shape
+    dh = up // h_heads
+
+    def heads(w):
+        return jnp.einsum("bsu,uhd->bhsd", xi, w.astype(dtype))
+
+    q, k, v = heads(p["wq"]), heads(p["wk"]), heads(p["wv"])
+    i_pre = jnp.einsum("bsu,uh->bhs", xi, p["w_igate"].astype(dtype)) \
+        + p["b_igate"].astype(dtype)[None, :, None]
+    f_pre = jnp.einsum("bsu,uh->bhs", xi, p["w_fgate"].astype(dtype)) \
+        + p["b_fgate"].astype(dtype)[None, :, None]
+
+    new_state = None
+    if decode and state is not None:
+        new_state, h = mlstm_recurrent_step(
+            state, q[:, :, 0], k[:, :, 0], v[:, :, 0], i_pre[:, :, 0], f_pre[:, :, 0]
+        )
+        h = h[:, :, None]  # (B,H,1,Dh)
+    else:
+        h = mlstm_parallel(q, k, v, i_pre, f_pre)
+        if state is not None:
+            # prefill: roll the sequence through the recurrence to build state
+            def step(st, inp):
+                qq, kk, vv, ii, ff = inp
+                st, _ = mlstm_recurrent_step(st, qq, kk, vv, ii, ff)
+                return st, None
+
+            xs = (
+                q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+                v.transpose(2, 0, 1, 3),
+                i_pre.transpose(2, 0, 1), f_pre.transpose(2, 0, 1),
+            )
+            new_state, _ = jax.lax.scan(step, state, xs)
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, up)
+    # per-head group norm stand-in: rms over up dim with learned scale
+    h32 = h.astype(jnp.float32)
+    h = (h32 / jnp.sqrt(jnp.mean(h32**2, -1, keepdims=True) + 1e-6)).astype(dtype)
+    h = h * p["out_norm"].astype(dtype)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bsu,ud->bsd", h, p["down_proj"].astype(dtype))
+    return shard_act(out, ("batch", "seq", "embed")), new_state
+
+
+def init_mlstm_state(batch: int, cfg: ModelConfig) -> dict:
+    h = cfg.n_heads
+    up = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dh = up // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e9, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = nn.Param((d, h, dh), ("embed", "heads", "head_dim"))
+        gates[f"r_{g}"] = nn.Param((h, dh, dh), ("heads", "head_dim", "qk_dim"),
+                                   init="fan_in", scale=0.5)
+        gates[f"b_{g}"] = nn.Param((h, dh), ("heads", "head_dim"),
+                                   init="ones" if g == "f" else "zeros",
+                                   no_weight_decay=True, no_trust_ratio=True)
+    gates["out_norm"] = nn.Param((d,), ("embed",), init="ones",
+                                 no_weight_decay=True, no_trust_ratio=True)
+    gates["ff"] = {
+        "wi": nn.Param((d, int(cfg.xlstm_proj_factor * d)), ("embed", "ff")),
+        "wo": nn.Param((int(cfg.xlstm_proj_factor * d), d), ("ff", "embed")),
+    }
+    return gates
+
+
+def slstm_block(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """sLSTM with exponential gating + stabilizer (paper eq. 13-24)."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    h_heads, dh = cfg.n_heads, d // cfg.n_heads
+
+    pre = {
+        g: jnp.einsum("bsd,dhk->bshk", x, p[f"w_{g}"].astype(dtype))
+        for g in ("i", "f", "z", "o")
+    }
+
+    if state is None:
+        state = init_slstm_state(b, cfg)
+
+    def step(st, t_in):
+        c, n, m, h_prev = st["c"], st["n"], st["m"], st["h"]
+
+        def gate(g):
+            rec = jnp.einsum("bhk,hkj->bhj", h_prev, p[f"r_{g}"].astype(jnp.float32))
+            return t_in[g].astype(jnp.float32) + rec + p[f"b_{g}"].astype(jnp.float32)
+
+        i_t, f_t, z_t, o_t = gate("i"), gate("f"), gate("z"), gate("o")
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_eff = jnp.exp(i_t - m_new)
+        f_eff = jnp.exp(log_f + m - m_new)
+        c_new = f_eff * c + i_eff * jnp.tanh(z_t)
+        n_new = f_eff * n + i_eff
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+        return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}, h_new
+
+    if decode:
+        t_in = {g: pre[g][:, 0] for g in pre}
+        new_state, h_out = step(state, t_in)
+        hs = h_out[:, None]
+    else:
+        xs = {g: pre[g].swapaxes(0, 1) for g in pre}  # (S, B, H, Dh)
+        new_state, hs = jax.lax.scan(step, state, xs)
+        hs = hs.swapaxes(0, 1)  # (B, S, H, Dh)
+
+    y = hs.reshape(b, s, d).astype(dtype)
+    y32 = y.astype(jnp.float32)
+    y = (y32 / jnp.sqrt(jnp.mean(y32**2, -1, keepdims=True) + 1e-6)).astype(dtype)
+    y = y * p["out_norm"].astype(dtype)
+    # small gated FF (block-internal)
+    ff = jnp.einsum("bsd,df->bsf", y, p["ff"]["wi"].astype(dtype))
+    ff = jax.nn.gelu(ff)
+    y = jnp.einsum("bsf,fd->bsd", ff, p["ff"]["wo"].astype(dtype))
+    return shard_act(y, ("batch", "seq", "embed")), new_state
+
+
+def init_slstm_state(batch: int, cfg: ModelConfig) -> dict:
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z(), "n": z(), "m": jnp.full((batch, h, dh), -1e9, jnp.float32),
+            "h": z()}
+
+
+def abstract_mlstm_state(batch: int, cfg: ModelConfig):
+    h = cfg.n_heads
+    up = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dh = up // h
+    return {
+        "c": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+    }
+
+
+def abstract_slstm_state(batch: int, cfg: ModelConfig):
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    sds = lambda: jax.ShapeDtypeStruct((batch, h, dh), jnp.float32)
+    return {"c": sds(), "n": sds(), "m": sds(), "h": sds()}

@@ -1,0 +1,283 @@
+"""Unified transformer: dense / GQA / MQA / sliding-window / MLA / MoE.
+
+Covers 8 of the 10 assigned architectures (all but jamba and xlstm):
+smollm, granite-20b, mistral-nemo, command-r, granite-moe, deepseek-v3,
+hubert (causal=False), paligemma (prefix embeddings).
+
+Deep stacks are ``lax.scan``'d over stacked parameter leaves; heterogeneous
+prefixes (DeepSeek's 3 leading dense layers) are a second, separately
+scanned segment.  KV caches are stacked per segment with the same leading
+layer axis so they ride through the scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.layers.attention import (
+    abstract_kv_cache,
+    attention,
+    attention_defs,
+    init_kv_cache,
+)
+from repro.models.layers.embeddings import (
+    embed,
+    embed_defs,
+    tied_unembed,
+    unembed,
+    unembed_defs,
+)
+from repro.models.layers.mla import (
+    abstract_mla_cache,
+    init_mla_cache,
+    mla_attention,
+    mla_defs,
+)
+from repro.models.layers.mlp import mlp, mlp_defs
+from repro.models.layers.moe import moe, moe_defs
+from repro.models.layers.norms import apply_norm, norm_defs
+from repro.sharding import shard_act
+
+
+def _block_defs(cfg: ModelConfig, *, is_moe: bool) -> dict:
+    d = cfg.d_model
+    block = {
+        "ln1": norm_defs(d, cfg.norm_type),
+        "ln2": norm_defs(d, cfg.norm_type),
+        "attn": mla_defs(cfg) if cfg.use_mla else attention_defs(cfg),
+    }
+    if is_moe:
+        block["moe"] = moe_defs(cfg)
+    else:
+        block["mlp"] = mlp_defs(d, cfg.d_ff, cfg.gated_mlp)
+    return block
+
+
+def _n_main(cfg: ModelConfig) -> int:
+    return cfg.n_layers - cfg.n_dense_layers
+
+
+def transformer_defs(cfg: ModelConfig) -> dict:
+    main_is_moe = cfg.n_experts > 0
+    defs: Dict[str, Any] = {
+        "embed": embed_defs(cfg.vocab_size, cfg.d_model),
+        "blocks": nn.stack(_block_defs(cfg, is_moe=main_is_moe), _n_main(cfg)),
+        "final_norm": norm_defs(cfg.d_model, cfg.norm_type),
+    }
+    if cfg.n_dense_layers:
+        defs["dense_blocks"] = nn.stack(
+            _block_defs(cfg, is_moe=False), cfg.n_dense_layers
+        )
+    if not cfg.tie_embeddings:
+        defs["unembed"] = unembed_defs(cfg.d_model, cfg.vocab_size)
+    if cfg.frontend == "audio_stub" and cfg.mask_ratio > 0:
+        defs["mask_embed"] = nn.Param(
+            (cfg.d_model,), ("embed",), init="normal", scale=0.02
+        )
+    if cfg.use_mtp:
+        defs["mtp"] = {
+            "proj": nn.Param((2 * cfg.d_model, cfg.d_model), ("inner", "embed")),
+            "block": _block_defs(cfg, is_moe=False),
+            "norm": norm_defs(cfg.d_model, cfg.norm_type),
+        }
+    return defs
+
+
+def _one_block(
+    bp: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict],
+    decode: bool,
+    window,
+) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
+    h = apply_norm(bp["ln1"], x, cfg.norm_type)
+    if cfg.use_mla:
+        attn_out, new_cache = mla_attention(
+            bp["attn"], h, positions, cfg, cache=cache, decode=decode
+        )
+    else:
+        attn_out, new_cache = attention(
+            bp["attn"], h, positions, cfg, cache=cache, decode=decode, window=window
+        )
+    x = x + attn_out
+    h = apply_norm(bp["ln2"], x, cfg.norm_type)
+    aux: Dict[str, jnp.ndarray] = {}
+    if "moe" in bp:
+        ff_out, aux = moe(bp["moe"], h, cfg)
+    else:
+        ff_out = mlp(bp["mlp"], h, cfg)
+    return x + ff_out, new_cache, aux
+
+
+def _scan_segment(
+    stacked: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    caches: Optional[dict],
+    decode: bool,
+    window,
+) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
+    """Scan a homogeneous stack of blocks over the leading layer axis."""
+
+    def body(carry, xs):
+        xc = carry
+        bp, cache = xs
+        y, new_cache, aux = _one_block(
+            bp, xc, positions, cfg, cache=cache, decode=decode, window=window
+        )
+        return y, (new_cache, aux)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    if not cfg.scan_layers:
+        # unrolled path: identical math, layer-indexed slices (perf knob; also
+        # used by the dry-run for while-loop-free cost accounting)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        ys = []
+        for i in range(n):
+            sl = jax.tree.map(lambda a: a[i], stacked)
+            ci = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            x, y = body(x, (sl, ci))
+            ys.append(y)
+        new_caches = (
+            None if caches is None
+            else jax.tree.map(lambda *a: jnp.stack(a), *[y[0] for y in ys])
+        )
+        auxs = {}
+        if ys and ys[0][1]:
+            auxs = {
+                k: jnp.stack([y[1][k] for y in ys]) for k in ys[0][1]
+            }
+        aux = {k: jnp.mean(v) for k, v in auxs.items()}
+        return x, new_caches, aux
+
+    x, (new_caches, auxs) = jax.lax.scan(body, x, (stacked, caches))
+    aux = {k: jnp.mean(v) for k, v in auxs.items()}
+    return x, new_caches, aux
+
+
+def _embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig, dtype):
+    """Token / prefix-embedding entry, per modality frontend."""
+    if cfg.frontend == "audio_stub":
+        x = batch["frame_embeds"].astype(dtype)
+        if cfg.mask_ratio > 0 and "mask" in batch:
+            m = batch["mask"][..., None]
+            x = jnp.where(m, params["mask_embed"].astype(dtype), x)
+        return shard_act(x, ("batch", "seq", "embed"))
+    x = embed(params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "vision_stub" and "image_embeds" in batch:
+        # decode steps carry no image prefix (it already lives in the cache)
+        prefix = batch["image_embeds"].astype(dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+        x = shard_act(x, ("batch", "seq", "embed"))
+    return x
+
+
+def forward(
+    params: dict,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    caches: Optional[dict] = None,
+    decode: bool = False,
+    positions: Optional[jnp.ndarray] = None,
+    window="cfg",
+) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
+    """Returns (logits, new_caches, aux)."""
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = _embed_inputs(params, batch, cfg, dtype)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    caches = caches or {}
+    aux: Dict[str, jnp.ndarray] = {}
+    new_caches: Dict[str, Any] = {}
+
+    if "dense_blocks" in params:
+        x, nc, a = _scan_segment(
+            params["dense_blocks"], x, positions, cfg,
+            caches=caches.get("dense"), decode=decode, window=window,
+        )
+        new_caches["dense"] = nc
+        aux.update(a)
+
+    x, nc, a = _scan_segment(
+        params["blocks"], x, positions, cfg,
+        caches=caches.get("main"), decode=decode, window=window,
+    )
+    new_caches["main"] = nc
+    aux.update({k: (aux[k] + v) / 2 if k in aux else v for k, v in a.items()})
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+
+    if cfg.use_mtp and not decode:
+        aux["mtp_hidden"] = x  # consumed by the MTP head in the loss
+
+    if cfg.tie_embeddings:
+        logits = tied_unembed(x, params["embed"])
+    else:
+        logits = unembed(x, params["unembed"])
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, (new_caches if caches else None), aux
+
+
+def mtp_logits(
+    params: dict, hidden: jnp.ndarray, batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """DeepSeek-V3 single-depth MTP head: predict token t+2 from
+    [h_t ; emb(t+1)] through one extra block."""
+    dtype = hidden.dtype
+    mp = params["mtp"]
+    nxt = embed(params["embed"], batch["tokens"], dtype)
+    nxt = jnp.roll(nxt, -1, axis=1)
+    h = jnp.concatenate([hidden, nxt], axis=-1)
+    h = jnp.einsum("bsd,dk->bsk", h, mp["proj"].astype(dtype))
+    b, s = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h, _, _ = _one_block(mp["block"], h, positions, cfg, cache=None,
+                         decode=False, window=None)
+    h = apply_norm(mp["norm"], h, cfg.norm_type)
+    if cfg.tie_embeddings:
+        return tied_unembed(h, params["embed"])
+    return unembed(h, params["unembed"])
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _stacked_cache(maker, n_layers: int, batch: int, max_len: int, cfg, dtype):
+    one = maker(batch, max_len, cfg, dtype)
+    if isinstance(jax.tree.leaves(one)[0], jax.ShapeDtypeStruct):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype), one
+        )
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape).copy(), one)
+
+
+def make_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, abstract: bool, dtype=jnp.bfloat16
+) -> dict:
+    kv = (abstract_mla_cache if cfg.use_mla else abstract_kv_cache) if abstract else (
+        init_mla_cache if cfg.use_mla else init_kv_cache
+    )
+    caches = {"main": _stacked_cache(kv, _n_main(cfg), batch, max_len, cfg, dtype)}
+    if cfg.n_dense_layers:
+        caches["dense"] = _stacked_cache(
+            kv, cfg.n_dense_layers, batch, max_len, cfg, dtype
+        )
+    return caches

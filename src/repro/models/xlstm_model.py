@@ -1,0 +1,131 @@
+"""xLSTM language model (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+The scan unit is a (mLSTM, sLSTM) pair when ``slstm_ratio``==2 (the 350M
+config), degenerating to all-mLSTM pairs when slstm_ratio==0.
+Decode is fully recurrent (matrix memory + scalar memory) — O(1) in sequence
+length, which is why this arch runs the ``long_500k`` shape natively.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ModelConfig
+from repro.models.layers.embeddings import embed, embed_defs, tied_unembed
+from repro.models.layers.norms import apply_norm, norm_defs
+from repro.models.layers.xlstm import (
+    abstract_mlstm_state,
+    abstract_slstm_state,
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_block,
+    mlstm_defs,
+    slstm_block,
+    slstm_defs,
+)
+
+
+def _pair_kinds(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.slstm_ratio and cfg.slstm_ratio > 0:
+        return ("mlstm", "slstm")
+    return ("mlstm", "mlstm")
+
+
+def _pair_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    pair: Dict[str, Any] = {}
+    for i, kind in enumerate(_pair_kinds(cfg)):
+        pair[f"sub{i}"] = {
+            "ln": norm_defs(d, cfg.norm_type),
+            "cell": mlstm_defs(cfg) if kind == "mlstm" else slstm_defs(cfg),
+        }
+    return pair
+
+
+def xlstm_defs(cfg: ModelConfig) -> dict:
+    n_pairs = cfg.n_layers // 2
+    return {
+        "embed": embed_defs(cfg.vocab_size, cfg.d_model),
+        "pairs": nn.stack(_pair_defs(cfg), n_pairs),
+        "final_norm": norm_defs(cfg.d_model, cfg.norm_type),
+    }
+
+
+def forward(
+    params: dict,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    caches: Optional[dict] = None,
+    decode: bool = False,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = embed(params["embed"], batch["tokens"], dtype)
+    kinds = _pair_kinds(cfg)
+
+    def body(carry, xs):
+        xc = carry
+        pp, pcache = xs
+        new_cache: Dict[str, Any] = {}
+        for i, kind in enumerate(kinds):
+            sub = pp[f"sub{i}"]
+            key = f"sub{i}"
+            h = apply_norm(sub["ln"], xc, cfg.norm_type)
+            fn = mlstm_block if kind == "mlstm" else slstm_block
+            out, st = fn(sub["cell"], h, cfg,
+                         state=(pcache or {}).get(key), decode=decode)
+            if pcache is not None:
+                new_cache[key] = st
+            xc = xc + out
+        return xc, (new_cache if pcache is not None else None)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(params["pairs"])[0].shape[0]
+        ys = []
+        for i in range(n):
+            pp = jax.tree.map(lambda a: a[i], params["pairs"])
+            ci = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            x, y = body(x, (pp, ci))
+            ys.append(y)
+        new_caches = (
+            None if caches is None
+            else jax.tree.map(lambda *a: jnp.stack(a), *ys)
+        )
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["pairs"], caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = tied_unembed(x, params["embed"])
+    return logits, new_caches, {}
+
+
+def make_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, abstract: bool, dtype=jnp.bfloat16
+) -> dict:
+    del max_len  # recurrent state is O(1) in sequence length
+    n_pairs = cfg.n_layers // 2
+    pair: Dict[str, Any] = {}
+    for i, kind in enumerate(_pair_kinds(cfg)):
+        if kind == "mlstm":
+            pair[f"sub{i}"] = (
+                abstract_mlstm_state(batch, cfg) if abstract
+                else init_mlstm_state(batch, cfg)
+            )
+        else:
+            pair[f"sub{i}"] = (
+                abstract_slstm_state(batch, cfg) if abstract
+                else init_slstm_state(batch, cfg)
+            )
+    if abstract:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pairs,) + s.shape, s.dtype), pair
+        )
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_pairs,) + a.shape).copy(), pair
+    )

@@ -1,0 +1,29 @@
+from repro.nn.module import (
+    LAYERS_AXIS,
+    Param,
+    abstract_params,
+    cast_tree,
+    init_params,
+    is_param,
+    layer_axis_tree,
+    logical_axes_tree,
+    param_count,
+    stack,
+    trust_ratio_mask,
+    weight_decay_mask,
+)
+
+__all__ = [
+    "LAYERS_AXIS",
+    "Param",
+    "abstract_params",
+    "cast_tree",
+    "init_params",
+    "is_param",
+    "layer_axis_tree",
+    "logical_axes_tree",
+    "param_count",
+    "stack",
+    "trust_ratio_mask",
+    "weight_decay_mask",
+]

@@ -1,0 +1,159 @@
+"""Functional parameter-definition system.
+
+Models declare their parameters as nested dicts of :class:`Param`, each carrying
+its shape, dtype, initializer and *logical sharding axes*.  From one definition
+tree we derive:
+
+  * concrete parameters        (``init_params``)
+  * ShapeDtypeStruct stand-ins (``abstract_params``)  — used by the dry-run
+  * PartitionSpec trees        (``repro.sharding.specs_for``)
+  * scan metadata              (``layer_axis_tree``)   — used by the scan-aware
+    layerwise optimizer (per-layer trust ratios on stacked leaves)
+
+No flax dependency; everything is plain pytrees + pure functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import path_str
+
+# Logical axis name used for stacked (scanned) layer parameters.
+LAYERS_AXIS = "layers"
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declaration of a single weight tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed | uniform_scalar
+    dtype: Any = jnp.float32
+    scale: float = 1.0
+    # metadata consumed by the optimizer layer:
+    no_weight_decay: bool = False  # e.g. norm scales / biases
+    no_trust_ratio: bool = False   # excluded from layerwise adaptation
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"Param shape {self.shape} and axes {self.axes} rank mismatch"
+            )
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def tree_map_with_path(fn, tree, *rest, is_leaf=None):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x, *r: fn(path_str(kp), x, *r), tree, *rest, is_leaf=is_leaf
+    )
+
+
+def _param_tree_map(fn: Callable[[str, Param], Any], defs):
+    return tree_map_with_path(fn, defs, is_leaf=is_param)
+
+
+def stack(defs, n_layers: int):
+    """Prepend a stacked-layers axis to every Param in `defs` (for lax.scan)."""
+
+    def add_axis(_, p: Param) -> Param:
+        return dataclasses.replace(
+            p, shape=(n_layers,) + tuple(p.shape), axes=(LAYERS_AXIS,) + tuple(p.axes)
+        )
+
+    return _param_tree_map(add_axis, defs)
+
+
+def _fold_path(rng: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(rng, h)
+
+
+def _initialize(p: Param, key: jax.Array) -> jax.Array:
+    shape = tuple(p.shape)
+    if p.init == "zeros":
+        return jnp.zeros(shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(shape, p.dtype)
+    if p.init == "embed":
+        return (p.scale * jax.random.normal(key, shape)).astype(p.dtype)
+    if p.init == "normal":
+        return (p.scale * jax.random.normal(key, shape)).astype(p.dtype)
+    if p.init == "uniform_scalar":
+        # e.g. SSM dt / A params: uniform in (0, scale]
+        u = jax.random.uniform(key, shape, minval=1e-3, maxval=1.0)
+        return (p.scale * u).astype(p.dtype)
+    if p.init == "fan_in":
+        # fan-in from the second-to-last dim (matmul convention), skipping the
+        # stacked-layers axis which is axis 0 when present.
+        dims = [d for d, a in zip(shape, p.axes) if a != LAYERS_AXIS]
+        fan_in = dims[-2] if len(dims) >= 2 else dims[-1]
+        std = p.scale / max(fan_in, 1) ** 0.5
+        return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(
+            p.dtype
+        )
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def init_params(defs, rng: jax.Array):
+    """Materialize a definition tree into concrete arrays (deterministic per path)."""
+    return _param_tree_map(lambda path, p: _initialize(p, _fold_path(rng, path)), defs)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree (no allocation) — dry-run input."""
+    return _param_tree_map(
+        lambda _, p: jax.ShapeDtypeStruct(tuple(p.shape), jnp.dtype(p.dtype)), defs
+    )
+
+
+def logical_axes_tree(defs):
+    return _param_tree_map(lambda _, p: tuple(p.axes), defs)
+
+
+def layer_axis_tree(defs):
+    """Tree of ints: index of the stacked-layers axis per leaf, -1 if unstacked.
+
+    (-1 rather than None: None is an empty pytree node and would break
+    tree_map alignment.)  The layerwise optimizer uses this to compute
+    per-layer (per-slice) norms on scanned parameter stacks.
+    """
+
+    def f(_, p: Param):
+        return p.axes.index(LAYERS_AXIS) if LAYERS_AXIS in p.axes else -1
+
+    return _param_tree_map(f, defs)
+
+
+def weight_decay_mask(defs):
+    """True where weight decay applies (paper/reference impl: skip norms+biases)."""
+    return _param_tree_map(lambda _, p: not p.no_weight_decay, defs)
+
+
+def trust_ratio_mask(defs):
+    """True where the layerwise trust ratio applies."""
+    return _param_tree_map(lambda _, p: not p.no_trust_ratio, defs)
+
+
+def param_count(defs) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(defs, is_leaf=is_param):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

@@ -1,0 +1,256 @@
+"""Minimal optax-style gradient-transformation library.
+
+optax is not available in this environment, and the paper's contribution *is*
+an optimizer, so the transformation algebra is built here from scratch:
+
+    GradientTransformation(init, update)
+    update(grads, state, params) -> (updates, state)
+
+All transforms are pure pytree functions, compose with ``chain`` and are
+pjit-friendly (norm reductions over sharded leaves lower to SPMD all-reduces).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+class TraceState(NamedTuple):
+    momentum: PyTree
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+class ScaleByAdagradState(NamedTuple):
+    accum: PyTree
+
+
+class ScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def identity() -> GradientTransformation:
+    return GradientTransformation(
+        init=lambda params: EmptyState(),
+        update=lambda u, s, p=None: (u, s),
+    )
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    return GradientTransformation(
+        init=lambda params: EmptyState(),
+        update=lambda u, s, p=None: (jax.tree.map(lambda x: factor * x, u), s),
+    )
+
+
+def _lr_value(lr: ScalarOrSchedule, count) -> jnp.ndarray:
+    return lr(count) if callable(lr) else jnp.asarray(lr)
+
+
+def scale_by_learning_rate(
+    learning_rate: ScalarOrSchedule, *, flip_sign: bool = True
+) -> GradientTransformation:
+    """Multiply updates by -lr (lr may be a schedule of the step count)."""
+
+    def init(params):
+        return ScheduleState(count=jnp.zeros([], jnp.int32))
+
+    def update(updates, state, params=None):
+        lr = _lr_value(learning_rate, state.count)
+        m = -lr if flip_sign else lr
+        updates = jax.tree.map(lambda x: (m * x).astype(x.dtype), updates)
+        return updates, ScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init, update)
+
+
+def trace(decay: float, *, average: bool = True) -> GradientTransformation:
+    """Heavy-ball momentum: m = decay*m + (1-decay)*g (paper's LARS form)."""
+    mix = (1.0 - decay) if average else 1.0
+
+    def init(params):
+        return TraceState(
+            momentum=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        )
+
+    def update(updates, state, params=None):
+        new_m = jax.tree.map(
+            lambda m, g: decay * m + mix * g.astype(jnp.float32),
+            state.momentum,
+            updates,
+        )
+        return new_m, TraceState(momentum=new_m)
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_adam(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    *,
+    bias_correction: bool = True,
+    nesterov_m: bool = False,
+    nesterov_v: bool = False,
+    moment_dtype=None,
+) -> GradientTransformation:
+    """Adam second-moment rescaling; r_t = m̂/(sqrt(v̂)+eps).
+
+    ``bias_correction=False`` implements App. E of the paper (adam-correction
+    removed; its effect is equivalent to LR warmup).  ``nesterov_m`` gives the
+    N-LAMB first-moment rule (Alg. 3) and ``nesterov_v`` additionally the
+    NN-LAMB second-moment rule (Alg. 4), both with constant betas.
+    """
+
+    mdt = jnp.dtype(moment_dtype) if moment_dtype is not None else jnp.float32
+
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda x: jnp.zeros_like(x, mdt), params)
+        return ScaleByAdamState(count=jnp.zeros([], jnp.int32), mu=zeros(), nu=zeros())
+
+    def update(updates, state, params=None):
+        count = state.count + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), updates)
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g).astype(mdt),
+            state.mu, g32)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * g * g).astype(mdt),
+            state.nu, g32)
+
+        t = count.astype(jnp.float32)
+        if nesterov_m:
+            # Alg. 3 with constant beta1: m̂ = (b1*m_t)/(1-b1^{t+1}) + ((1-b1)*g)/(1-b1^t)
+            c_next = 1.0 - b1 ** (t + 1.0)
+            c_cur = 1.0 - b1**t
+            mu_hat = jax.tree.map(
+                lambda m, g: b1 * m / c_next + (1 - b1) * g / c_cur, mu, g32
+            )
+        elif bias_correction:
+            c = 1.0 - b1**t
+            mu_hat = jax.tree.map(lambda m: m / c, mu)
+        else:
+            mu_hat = mu
+
+        if nesterov_v:
+            d_next = 1.0 - b2 ** (t + 1.0)
+            d_cur = 1.0 - b2**t
+            nu_hat = jax.tree.map(
+                lambda v, g: b2 * v / d_next + (1 - b2) * g * g / d_cur, nu, g32
+            )
+        elif nesterov_m:
+            # Alg. 3: v̂ = b2*v_t/(1-b2^t)
+            d = 1.0 - b2**t
+            nu_hat = jax.tree.map(lambda v: b2 * v / d, nu)
+        elif bias_correction:
+            d = 1.0 - b2**t
+            nu_hat = jax.tree.map(lambda v: v / d, nu)
+        else:
+            nu_hat = nu
+
+        new_updates = jax.tree.map(
+            lambda m, v: m.astype(jnp.float32) / (jnp.sqrt(v.astype(jnp.float32)) + eps),
+            mu_hat, nu_hat,
+        )
+        return new_updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_adagrad(eps: float = 1e-7) -> GradientTransformation:
+    def init(params):
+        return ScaleByAdagradState(
+            accum=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        )
+
+    def update(updates, state, params=None):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), updates)
+        accum = jax.tree.map(lambda a, g: a + g * g, state.accum, g32)
+        new_updates = jax.tree.map(
+            lambda g, a: g / (jnp.sqrt(a) + eps), g32, accum
+        )
+        return new_updates, ScaleByAdagradState(accum=accum)
+
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(
+    weight_decay: float, mask: Optional[PyTree] = None
+) -> GradientTransformation:
+    """u += wd * params (decoupled weight decay, applied where mask is True)."""
+
+    def init(params):
+        return EmptyState()
+
+    def update(updates, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        if mask is None:
+            new = jax.tree.map(
+                lambda u, p: u + weight_decay * p.astype(u.dtype), updates, params
+            )
+        else:
+            new = jax.tree.map(
+                lambda u, p, m: u + (weight_decay * p.astype(u.dtype) if m else 0.0),
+                updates,
+                params,
+                mask,
+            )
+        return new, state
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return EmptyState()
+
+    def update(updates, state, params=None):
+        sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(updates)]
+        gnorm = jnp.sqrt(jnp.sum(jnp.stack(sq)))
+        factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        return jax.tree.map(lambda x: (x * factor).astype(x.dtype), updates), state
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """x_{t+1} = x_t + u_t, preserving param dtypes."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )

@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, Request, make_decode_step, make_prefill_step
+
+__all__ = ["Engine", "Request", "make_decode_step", "make_prefill_step"]

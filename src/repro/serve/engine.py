@@ -1,0 +1,114 @@
+"""Serving engine: prefill + decode steps and a batched-request driver.
+
+``serve_step`` (single-token decode over a fixed-size cache) is the function
+the decode-shaped dry-runs lower.  The :class:`Engine` adds a minimal batched
+greedy/temperature generation loop over the jit'd steps — the end-to-end
+serving example uses it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model
+from repro.sharding.context import ShardCtx, use_sharding
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        last = logits[:, -1]
+        return last, cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    """One-token step: (params, cache, tokens(B,1), positions(B,1)) → logits."""
+
+    def decode_step(params, cache, tokens, positions):
+        logits, cache = model.decode(params, {"tokens": tokens}, cache, positions)
+        return logits[:, -1], cache
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+class Engine:
+    """Static-batch generation engine (greedy / temperature sampling)."""
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        max_len: int = 512,
+        shard_ctx: Optional[ShardCtx] = None,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.shard_ctx = shard_ctx
+        self.rng = jax.random.key(seed)
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.rng, sub = jax.random.split(self.rng)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def generate_batch(self, requests: List[Request]) -> List[Request]:
+        """Pad prompts to a common length, prefill once, decode greedily."""
+        t0 = time.perf_counter()
+        b = len(requests)
+        s = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, s), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, : len(r.prompt)] = r.prompt  # left-aligned, zero-padded
+        max_new = max(r.max_new_tokens for r in requests)
+
+        with use_sharding(self.shard_ctx):
+            cache = self.model.make_cache(b, self.max_len)
+            last, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)}, cache)
+            out = np.zeros((b, max_new), np.int32)
+            tok = self._sample(last, requests[0].temperature)
+            for t in range(max_new):
+                out[:, t] = np.asarray(tok)
+                positions = jnp.full((b, 1), s + t, jnp.int32)
+                last, cache = self._decode(
+                    self.params, cache, tok[:, None].astype(jnp.int32), positions
+                )
+                tok = self._sample(last, requests[0].temperature)
+
+        dt = time.perf_counter() - t0
+        for i, r in enumerate(requests):
+            r.out_tokens = out[i, : r.max_new_tokens]
+            r.latency_s = dt
+        return requests
+
+    def throughput_stats(self, requests: List[Request]) -> Dict[str, float]:
+        n_new = sum(r.max_new_tokens for r in requests)
+        dt = max(r.latency_s for r in requests)
+        return {
+            "requests": len(requests),
+            "new_tokens": n_new,
+            "wall_s": dt,
+            "tokens_per_s": n_new / dt if dt else 0.0,
+        }

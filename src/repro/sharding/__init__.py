@@ -1,0 +1,27 @@
+from repro.sharding.axes import (
+    batch_axes,
+    constrain,
+    default_act_rules,
+    default_param_rules,
+    logical_constraint,
+    resolve_spec,
+    shardings_for,
+    spec_sharding,
+    specs_for,
+)
+from repro.sharding.context import ShardCtx, shard_act, use_sharding
+
+__all__ = [
+    "ShardCtx",
+    "batch_axes",
+    "constrain",
+    "default_act_rules",
+    "default_param_rules",
+    "logical_constraint",
+    "resolve_spec",
+    "shard_act",
+    "shardings_for",
+    "spec_sharding",
+    "specs_for",
+    "use_sharding",
+]

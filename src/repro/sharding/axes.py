@@ -1,0 +1,144 @@
+"""Logical-axis → mesh-axis resolution.
+
+Every Param carries logical axis names ("embed", "heads", "ff", "experts", ...).
+A *rule set* maps logical names to mesh axes; :func:`resolve_spec` turns a
+(shape, axes) pair into a PartitionSpec, enforcing XLA constraints:
+
+  * a mesh axis may appear at most once per spec,
+  * a dimension must be divisible by the product of its mesh-axis sizes
+    (otherwise we progressively drop mesh axes — graceful fallback for e.g.
+    MQA's kv_heads=1 or SmolLM's 15 q-heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn import module as nn
+
+MeshAxes = Optional[Tuple[str, ...]]
+
+
+def default_param_rules(multi_pod: bool = False) -> dict:
+    """Default logical→mesh rules: FSDP over (pod,)data, TP/EP over model."""
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "vocab": ("model",),
+        "embed": fsdp,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "experts": ("model",),
+        "expert_ff": None,
+        "head_dim": None,
+        "qk_dim": None,
+        "v_dim": None,
+        "kv_lora": None,
+        "q_lora": None,
+        "inner": ("model",),   # mamba/xlstm expanded inner dim
+        "state": None,
+        "conv": None,
+        "mtp": None,
+        nn.LAYERS_AXIS: None,
+    }
+
+
+def default_act_rules(multi_pod: bool = False) -> dict:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,
+        "cache_seq": None,      # overridden to ("data",) for long-context decode
+        "embed": None,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+    }
+
+
+def _normalize(rule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def resolve_spec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    rules: Mapping[str, MeshAxes],
+    mesh: Mesh,
+) -> P:
+    """Resolve one tensor's logical axes into a PartitionSpec."""
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        mesh_axes = _normalize(rules.get(name)) if name is not None else ()
+        # Drop axes not present in the mesh (e.g. "pod" on a single-pod mesh),
+        # and axes already used by an earlier dimension.
+        mesh_axes = tuple(
+            a for a in mesh_axes if a in mesh.shape and a not in used
+        )
+        # Progressively drop trailing axes until the dim is divisible.
+        while mesh_axes:
+            total = 1
+            for a in mesh_axes:
+                total *= mesh.shape[a]
+            if dim % total == 0 and dim > 0:
+                break
+            mesh_axes = mesh_axes[:-1]
+        if mesh_axes:
+            used.update(mesh_axes)
+            out.append(mesh_axes[0] if len(mesh_axes) == 1 else tuple(mesh_axes))
+        else:
+            out.append(None)
+    # Trim trailing Nones for tidy specs.
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def specs_for(defs, mesh: Mesh, rules: Optional[Mapping] = None):
+    """PartitionSpec tree for a Param definition tree."""
+    if rules is None:
+        rules = default_param_rules(multi_pod="pod" in mesh.shape)
+
+    return nn.tree_map_with_path(
+        lambda _, p: resolve_spec(p.shape, p.axes, rules, mesh),
+        defs,
+        is_leaf=nn.is_param,
+    )
+
+
+def shardings_for(defs, mesh: Mesh, rules: Optional[Mapping] = None):
+    """NamedSharding tree for a Param definition tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_for(defs, mesh, rules))
+
+
+def spec_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def constrain(x, mesh: Mesh, *spec):
+    """with_sharding_constraint helper that is a no-op off-mesh (e.g. unit tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def logical_constraint(x, mesh: Mesh, axes: Sequence[Optional[str]], rules=None):
+    """Apply a sharding constraint from logical activation axis names."""
+    if rules is None:
+        rules = default_act_rules(multi_pod="pod" in mesh.shape)
+    spec = resolve_spec(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,60 @@
+"""Ambient sharding context.
+
+Model code annotates activations with *logical* axis names via
+:func:`shard_act`.  Whether (and how) that becomes a
+``with_sharding_constraint`` is decided by the ambient :class:`ShardCtx`
+installed by the launcher / dry-run.  Unit tests and single-device smoke runs
+simply never install a context, and every annotation is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.axes import default_act_rules, resolve_spec
+
+_state = threading.local()
+
+
+class ShardCtx:
+    def __init__(self, mesh: Mesh, act_rules: Optional[Mapping] = None):
+        self.mesh = mesh
+        self.act_rules = dict(
+            act_rules
+            if act_rules is not None
+            else default_act_rules(multi_pod="pod" in mesh.shape)
+        )
+
+    def with_rules(self, **overrides) -> "ShardCtx":
+        rules = dict(self.act_rules)
+        rules.update(overrides)
+        return ShardCtx(self.mesh, rules)
+
+
+def current() -> Optional[ShardCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardCtx]):
+    prev = current()
+    _state.ctx = ctx
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def shard_act(x, axes: Sequence[Optional[str]]):
+    """Annotate an activation with logical axes (no-op without a ShardCtx)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank mismatch: {x.shape} vs logical axes {axes}")
+    spec = resolve_spec(x.shape, axes, ctx.act_rules, ctx.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

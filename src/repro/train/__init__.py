@@ -1,0 +1,16 @@
+from repro.train.loss import IGNORE, cross_entropy, lm_loss, loss_for, masked_prediction_loss
+from repro.train.step import TrainState, make_loss_fn, make_optimizer, make_train_step
+from repro.train.trainer import Trainer
+
+__all__ = [
+    "IGNORE",
+    "TrainState",
+    "Trainer",
+    "cross_entropy",
+    "lm_loss",
+    "loss_for",
+    "make_loss_fn",
+    "make_optimizer",
+    "make_train_step",
+    "masked_prediction_loss",
+]

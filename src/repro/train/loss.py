@@ -1,0 +1,89 @@
+"""Loss functions: causal LM, masked prediction (HuBERT), MoE aux, MTP."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+IGNORE = -1  # label value for unsupervised positions
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over positions with label >= 0.  Returns (loss, accuracy)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(ll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == safe).astype(jnp.float32) * mask) / denom
+    return loss, acc
+
+
+def lm_loss(
+    logits: jnp.ndarray,
+    batch: Dict[str, jnp.ndarray],
+    aux: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    params=None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token CE + MoE aux losses (+ optional MTP head loss).
+
+    ``batch["labels"]`` is aligned with logits positions (label[t] is the
+    target for position t); IGNORE(-1) marks unsupervised positions.
+    """
+    labels = batch["labels"]
+    mtp_hidden = aux.pop("mtp_hidden", None)
+    ce, acc = cross_entropy(logits, labels)
+    total = ce
+    metrics = {"loss/ce": ce, "accuracy": acc}
+
+    if "moe_lb_loss" in aux:
+        lb = aux["moe_lb_loss"]
+        total = total + cfg.router_aux_coef * lb
+        metrics["loss/moe_lb"] = lb
+        metrics["moe/drop_fraction"] = aux.get("moe_drop_fraction", jnp.asarray(0.0))
+    if "moe_z_loss" in aux:
+        total = total + cfg.router_z_coef * aux["moe_z_loss"]
+        metrics["loss/moe_z"] = aux["moe_z_loss"]
+
+    if cfg.use_mtp and mtp_hidden is not None and params is not None:
+        from repro.models.transformer import mtp_logits
+
+        mlogits = mtp_logits(params, mtp_hidden, batch, cfg)
+        # MTP depth-1: predict label shifted one further; last position invalid
+        mtp_labels = jnp.concatenate(
+            [labels[:, 1:], jnp.full_like(labels[:, :1], IGNORE)], axis=1
+        )
+        mtp_ce, _ = cross_entropy(mlogits, mtp_labels)
+        total = total + cfg.mtp_loss_coef * mtp_ce
+        metrics["loss/mtp"] = mtp_ce
+
+    metrics["loss/total"] = total
+    return total, metrics
+
+
+def masked_prediction_loss(
+    logits: jnp.ndarray,
+    batch: Dict[str, jnp.ndarray],
+    aux: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    params=None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """HuBERT-style: CE on masked frames only (targets = cluster ids)."""
+    labels = jnp.where(batch["mask"], batch["labels"], IGNORE)
+    ce, acc = cross_entropy(logits, labels)
+    return ce, {"loss/ce": ce, "accuracy": acc, "loss/total": ce}
+
+
+def loss_for(cfg: ModelConfig):
+    if cfg.frontend == "audio_stub":
+        return masked_prediction_loss
+    return lm_loss

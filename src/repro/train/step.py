@@ -1,0 +1,148 @@
+"""Train-step factory: value_and_grad → optimizer → apply, with optional
+gradient-accumulation microbatching.
+
+``make_optimizer`` wires the model's pytree metadata (weight-decay mask,
+trust-ratio mask, stacked-layer axes) into the paper's optimizers so that
+LAMB's layerwise semantics survive scanned parameter stacks.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import core, optim
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.api import Model
+from repro.train.loss import loss_for
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def make_optimizer(
+    model: Model, tc: TrainConfig, schedule=None
+) -> optim.GradientTransformation:
+    lr = schedule if schedule is not None else tc.learning_rate
+    wd_mask = model.wd_mask()
+    trust_mask = model.trust_mask()
+    layer_axes = model.layer_axes()
+    common = dict(
+        wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
+        phi_bounds=tc.phi_bounds,
+    )
+    name = tc.optimizer
+    if name == "lamb":
+        return core.lamb(
+            lr, tc.b1, tc.b2, tc.eps, tc.weight_decay,
+            bias_correction=tc.bias_correction,
+            grad_clip_norm=tc.grad_clip_norm,
+            moment_dtype=tc.moment_dtype, **common,
+        )
+    if name == "nlamb":
+        return core.nlamb(lr, weight_decay=tc.weight_decay,
+                          grad_clip_norm=tc.grad_clip_norm, **common)
+    if name == "nnlamb":
+        return core.nnlamb(lr, weight_decay=tc.weight_decay,
+                           grad_clip_norm=tc.grad_clip_norm, **common)
+    if name == "lars":
+        return core.lars(lr, momentum=tc.b1, weight_decay=tc.weight_decay, **common)
+    if name == "adam":
+        return optim.adam(lr, tc.b1, tc.b2, tc.eps)
+    if name == "adamw":
+        return optim.adamw(lr, tc.b1, tc.b2, tc.eps, tc.weight_decay, wd_mask)
+    if name == "adagrad":
+        return optim.adagrad(lr)
+    if name == "momentum":
+        return optim.momentum(lr, tc.b1, tc.weight_decay, wd_mask)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def make_loss_fn(model: Model) -> Callable:
+    loss_impl = loss_for(model.cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.apply(params, batch)
+        return loss_impl(logits, batch, aux, model.cfg, params=params)
+
+    return loss_fn
+
+
+def _microbatch_grads(loss_fn, params, batch, n_micro: int):
+    """Sequential grad accumulation over `n_micro` equal batch slices."""
+
+    def slice_batch(b, i):
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(
+                x, i * (x.shape[0] // n_micro), x.shape[0] // n_micro, 0
+            ),
+            b,
+        )
+
+    def body(carry, i):
+        g_acc, m_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, slice_batch(batch, i)
+        )
+        g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+        m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+        return (g_acc, m_acc), None
+
+    (l0, m0), g0 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, slice_batch(batch, 0)
+    )
+    if n_micro == 1:
+        return g0, m0
+    (g, m), _ = jax.lax.scan(
+        body, (g0, m0), jnp.arange(1, n_micro)
+    )
+    inv = 1.0 / n_micro
+    return (
+        jax.tree.map(lambda x: x * inv, g),
+        jax.tree.map(lambda x: x * inv, m),
+    )
+
+
+def make_train_step(
+    model: Model,
+    tc: TrainConfig,
+    schedule=None,
+    *,
+    optimizer: Optional[optim.GradientTransformation] = None,
+) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(rng) -> TrainState, step_fn(state, batch) -> (state, metrics))."""
+    opt = optimizer if optimizer is not None else make_optimizer(model, tc, schedule)
+    loss_fn = make_loss_fn(model)
+    n_micro = tc.microbatch or 1
+
+    def init_fn(rng) -> TrainState:
+        params = model.init(rng)
+        return TrainState(params, opt.init(params), jnp.zeros([], jnp.int32))
+
+    def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, metrics = _microbatch_grads(loss_fn, state.params, batch, n_micro)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = optim.apply_updates(state.params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = _global_norm(grads)
+        if tc.log_trust_ratios:
+            metrics.update(
+                core.summarize_trust_ratios(
+                    core.trust_ratio_tree(
+                        state.params, updates, layer_axes=model.layer_axes(),
+                        phi_bounds=tc.phi_bounds,
+                    )
+                )
+            )
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return init_fn, step_fn
+
+
+def _global_norm(tree):
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(sq)))

@@ -1,0 +1,142 @@
+"""Trainer: jit'd step loop with metrics, checkpointing and mixed-batch
+stages (the paper's two-phase BERT recipe with stage-2 re-warm-up).
+
+Across a stage switch the optimizer *moments* (m, v — ScaleByAdamState /
+TraceState) carry over, while schedule counters restart at zero so stage 2
+re-warms up — exactly the §4.1 procedure.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.mixed_batch import Stage
+from repro.data.pipeline import DataPipeline
+from repro.models.api import Model
+from repro.optim.base import ScheduleState
+from repro.sharding.context import ShardCtx, use_sharding
+from repro.train.step import TrainState, make_optimizer, make_train_step
+
+
+def _reset_schedule_counts(opt_state):
+    """Zero every ScheduleState count (stage-2 re-warm-up) keeping moments."""
+
+    def reset(node):
+        if isinstance(node, ScheduleState):
+            return ScheduleState(count=jnp.zeros_like(node.count))
+        return node
+
+    return jax.tree.map(
+        reset, opt_state, is_leaf=lambda n: isinstance(n, ScheduleState)
+    )
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        train_cfg: TrainConfig,
+        *,
+        schedule=None,
+        shard_ctx: Optional[ShardCtx] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        log_every: int = 10,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.model = model
+        self.tc = train_cfg
+        self.shard_ctx = shard_ctx
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.log_every = log_every
+        self.log = log_fn
+        self.history: List[Dict[str, float]] = []
+        init_fn, step_fn = make_train_step(model, train_cfg, schedule)
+        self._init_fn = init_fn
+        self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        self.state: Optional[TrainState] = None
+
+    # ------------------------------------------------------------------
+    def init(self, seed: Optional[int] = None) -> TrainState:
+        rng = jax.random.key(self.tc.seed if seed is None else seed)
+        with use_sharding(self.shard_ctx):
+            self.state = jax.jit(self._init_fn)(rng)
+        return self.state
+
+    def fit(self, data, steps: int) -> List[Dict[str, float]]:
+        if self.state is None:
+            self.init()
+        t0 = time.perf_counter()
+        with use_sharding(self.shard_ctx):
+            for i in range(steps):
+                batch = next(data)
+                batch = jax.tree.map(jnp.asarray, batch)
+                self.state, metrics = self._step_fn(self.state, batch)
+                if (i + 1) % self.log_every == 0 or i == steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = int(self.state.step)
+                    m["wall_s"] = time.perf_counter() - t0
+                    self.history.append(m)
+                    self.log(
+                        f"step {m['step']:6d} loss {m.get('loss/total', 0.0):.4f} "
+                        f"acc {m.get('accuracy', 0.0):.4f}"
+                    )
+                if (
+                    self.checkpoint_dir
+                    and self.checkpoint_every
+                    and (i + 1) % self.checkpoint_every == 0
+                ):
+                    save_checkpoint(
+                        self.checkpoint_dir, int(self.state.step), self.state.params
+                    )
+        return self.history
+
+    # ------------------------------------------------------------------
+    def fit_stages(
+        self, stages: Sequence[Stage], *, data_seed: int = 0
+    ) -> List[Dict[str, float]]:
+        """Mixed-batch training: re-jit per stage, carry moments, re-warm-up."""
+        if self.state is None:
+            self.init()
+        for si, stage in enumerate(stages):
+            self.log(
+                f"== stage {si}: {stage.name} seq={stage.seq_len} "
+                f"batch={stage.batch_size} steps={stage.steps} "
+                f"lr={stage.learning_rate:.2e} warmup={stage.warmup_steps}"
+            )
+            opt = make_optimizer(self.model, self.tc, stage.schedule)
+            _, step_fn = make_train_step(
+                self.model, self.tc, stage.schedule, optimizer=opt
+            )
+            step_jit = jax.jit(step_fn, donate_argnums=(0,))
+            if si > 0:
+                # re-warm-up: keep moments, restart schedule counters
+                self.state = TrainState(
+                    self.state.params,
+                    _reset_schedule_counts(self.state.opt_state),
+                    self.state.step,
+                )
+            data = DataPipeline(
+                self.model.cfg, stage.batch_size, stage.seq_len, seed=data_seed + si
+            )
+            with use_sharding(self.shard_ctx):
+                for i in range(stage.steps):
+                    batch = jax.tree.map(jnp.asarray, next(data))
+                    self.state, metrics = step_jit(self.state, batch)
+                    if (i + 1) % self.log_every == 0 or i == stage.steps - 1:
+                        m = {k: float(v) for k, v in metrics.items()}
+                        m["step"] = int(self.state.step)
+                        m["stage"] = si
+                        self.history.append(m)
+                        self.log(
+                            f"[{stage.name}] step {m['step']:5d} "
+                            f"loss {m.get('loss/total', 0.0):.4f}"
+                        )
+        return self.history

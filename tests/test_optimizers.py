@@ -1,0 +1,196 @@
+"""LAMB / LARS / baselines: semantics vs the paper's Algorithms 1-2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core, optim
+from repro.kernels.ref import lamb_update_ref
+
+
+def _tree(rng, scale=1.0):
+    return {
+        "w": jnp.asarray(rng.standard_normal((8, 16)) * scale, jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((16,)) * scale, jnp.float32),
+    }
+
+
+def test_lamb_matches_single_tensor_reference(rng):
+    """core.lamb == the closed-form Algorithm-2 update (via kernels.ref)."""
+    x = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    params = {"w": x}
+    opt = core.lamb(0.01, weight_decay=0.01)
+    state = opt.init(params)
+    u, _ = opt.update({"w": g}, state, params)
+    got = optim.apply_updates(params, u)["w"]
+    want, _, _ = lamb_update_ref(
+        x, g, jnp.zeros_like(x), jnp.zeros_like(x),
+        lr=0.01, weight_decay=0.01, step=1,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_lamb_update_norm_equals_lr_times_phi(rng):
+    """Algorithm 2: per-layer update norm == eta * phi(||x||)."""
+    params = _tree(rng)
+    g = _tree(rng)
+    lr = 0.02
+    opt = core.lamb(lr, weight_decay=0.01)
+    u, _ = opt.update(g, opt.init(params), params)
+    for k in params:
+        unorm = float(jnp.linalg.norm(u[k]))
+        xnorm = float(jnp.linalg.norm(params[k]))
+        assert unorm == pytest.approx(lr * xnorm, rel=1e-4)
+
+
+def test_lamb_gradient_scale_invariance(rng):
+    """From zero moments, Adam's r (and hence LAMB) is invariant to g → c·g."""
+    params = _tree(rng)
+    g = _tree(rng)
+    g_scaled = jax.tree.map(lambda x: 100.0 * x, g)
+    opt = core.lamb(0.01, weight_decay=0.005, eps=0.0)
+    u1, _ = opt.update(g, opt.init(params), params)
+    u2, _ = opt.update(g_scaled, opt.init(params), params)
+    for a, b in zip(jax.tree.leaves(u1), jax.tree.leaves(u2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4)
+
+
+def test_scan_aware_slicing_equals_unstacked(rng):
+    """Stacked (L, ...) leaf + layer_axes == L separate per-layer leaves."""
+    L = 3
+    stacked = {"w": jnp.asarray(rng.standard_normal((L, 8, 4)), jnp.float32)}
+    g_stacked = {"w": jnp.asarray(rng.standard_normal((L, 8, 4)), jnp.float32)}
+    opt_s = core.lamb(0.01, weight_decay=0.01, layer_axes={"w": 0})
+    u_s, _ = opt_s.update(g_stacked, opt_s.init(stacked), stacked)
+
+    per_layer = {f"w{i}": stacked["w"][i] for i in range(L)}
+    g_per = {f"w{i}": g_stacked["w"][i] for i in range(L)}
+    opt_u = core.lamb(0.01, weight_decay=0.01)
+    u_u, _ = opt_u.update(g_per, opt_u.init(per_layer), per_layer)
+
+    for i in range(L):
+        np.testing.assert_allclose(
+            np.asarray(u_s["w"][i]), np.asarray(u_u[f"w{i}"]), rtol=1e-5, atol=1e-7
+        )
+
+
+def test_trust_mask_excludes_leaves(rng):
+    params = _tree(rng)
+    g = _tree(rng)
+    opt = core.lamb(0.01, weight_decay=0.0, trust_mask={"w": True, "b": False})
+    u, _ = opt.update(g, opt.init(params), params)
+    # masked leaf: plain adam*lr (unit-free), i.e. NOT rescaled to lr*||x||
+    assert float(jnp.linalg.norm(u["w"])) == pytest.approx(
+        0.01 * float(jnp.linalg.norm(params["w"])), rel=1e-4
+    )
+    assert float(jnp.linalg.norm(u["b"])) != pytest.approx(
+        0.01 * float(jnp.linalg.norm(params["b"])), rel=1e-2
+    )
+
+
+def test_lars_momentum_form(rng):
+    """Algorithm 1: m = b1*m + (1-b1)(g + wd*x); update direction ∝ m."""
+    params = {"w": jnp.ones((4, 4))}
+    g = {"w": jnp.full((4, 4), 2.0)}
+    wd, b1, lr = 0.1, 0.9, 0.5
+    opt = core.lars(lr, momentum=b1, weight_decay=wd)
+    u, _ = opt.update(g, opt.init(params), params)
+    m = (1 - b1) * (2.0 + wd * 1.0)  # scalar, all entries equal
+    # update = -lr * ||x||/||m|| * m  (phi = identity)
+    expect = -lr * 4.0 / (m * 4.0) * m  # norms over 16 entries: 4*|val|
+    np.testing.assert_allclose(np.asarray(u["w"]), expect, rtol=1e-5)
+
+
+def test_phi_bounds_clip(rng):
+    params = {"w": jnp.ones((2, 2)) * 100.0}  # ||x|| = 200
+    g = {"w": jnp.ones((2, 2))}
+    opt = core.lamb(1.0, weight_decay=0.0, phi_bounds=(0.0, 1.5))
+    u, _ = opt.update(g, opt.init(params), params)
+    assert float(jnp.linalg.norm(u["w"])) == pytest.approx(1.5, rel=1e-4)
+
+
+def test_zero_param_norm_falls_back_to_ratio_one():
+    params = {"w": jnp.zeros((4, 4))}
+    g = {"w": jnp.ones((4, 4))}
+    opt = core.lamb(0.01, weight_decay=0.0)
+    u, _ = opt.update(g, opt.init(params), params)
+    assert float(jnp.linalg.norm(u["w"])) > 0  # params still move
+
+
+def test_bias_correction_off_app_e(rng):
+    """App. E: removing adam-correction only rescales early steps."""
+    params = _tree(rng)
+    g = _tree(rng)
+    on = core.lamb(0.01, bias_correction=True)
+    off = core.lamb(0.01, bias_correction=False)
+    u_on, _ = on.update(g, on.init(params), params)
+    u_off, _ = off.update(g, off.init(params), params)
+    # layerwise normalization makes step-1 updates identical in *direction*
+    for a, b in zip(jax.tree.leaves(u_on), jax.tree.leaves(u_off)):
+        cos = jnp.sum(a * b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b))
+        assert float(cos) == pytest.approx(1.0, abs=1e-4)
+
+
+def test_nlamb_nnlamb_step(rng):
+    params = _tree(rng)
+    g = _tree(rng)
+    for f in (core.nlamb, core.nnlamb):
+        opt = f(0.01)
+        u, s = opt.update(g, opt.init(params), params)
+        assert all(jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(u))
+
+
+@pytest.mark.parametrize("name", ["adam", "adamw", "adagrad", "momentum", "sgd"])
+def test_baselines_step(name, rng):
+    params = _tree(rng)
+    g = _tree(rng)
+    opt = getattr(optim, name)(0.01)
+    u, s = opt.update(g, opt.init(params), params)
+    p2 = optim.apply_updates(params, u)
+    assert all(jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(p2))
+
+
+def test_grad_clip(rng):
+    params = _tree(rng)
+    g = jax.tree.map(lambda x: 1e4 * x, _tree(rng))
+    opt = optim.chain(optim.clip_by_global_norm(1.0), optim.scale_by_learning_rate(1.0))
+    u, _ = opt.update(g, opt.init(params), params)
+    total = float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(u))))
+    assert total == pytest.approx(1.0, rel=1e-4)
+
+
+def test_bf16_moments_close_to_fp32(rng):
+    """C1 §Perf knob: bf16 m/v track fp32 moments to bf16 tolerance."""
+    params = _tree(rng)
+    o32 = core.lamb(0.01, weight_decay=0.01)
+    o16 = core.lamb(0.01, weight_decay=0.01, moment_dtype="bfloat16")
+    s32, s16 = o32.init(params), o16.init(params)
+    p32 = p16 = params
+    for t in range(5):
+        g = _tree(np.random.default_rng(t))
+        u32, s32 = o32.update(g, s32, p32)
+        p32 = optim.apply_updates(p32, u32)
+        u16, s16 = o16.update(g, s16, p16)
+        p16 = optim.apply_updates(p16, u16)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p16)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0.05, atol=5e-3)
+    # the moments really are half-width
+    assert jax.tree.leaves(s16[0].mu)[0].dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("ord_", ["l1", "l2", "linf"])
+def test_norm_choice_ablation_app_f(ord_, rng):
+    """App. F: LAMB runs with L1/L2/L∞ trust-ratio norms; update direction
+    is identical (only the per-layer scale changes)."""
+    params = _tree(rng)
+    g = _tree(rng)
+    opt = core.lamb(0.01, weight_decay=0.01, norm_ord=ord_)
+    u, _ = opt.update(g, opt.init(params), params)
+    ref = core.lamb(0.01, weight_decay=0.01)
+    u2, _ = ref.update(g, ref.init(params), params)
+    for a, b in zip(jax.tree.leaves(u), jax.tree.leaves(u2)):
+        a, b = np.asarray(a).ravel(), np.asarray(b).ravel()
+        cos = a @ b / (np.linalg.norm(a) * np.linalg.norm(b))
+        assert cos == pytest.approx(1.0, abs=1e-5)  # same direction
+        assert np.isfinite(a).all()

@@ -1,0 +1,103 @@
+"""Schedule library vs the paper's Tables 4-5 (exact recipe values)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+
+BERT_TABLE4 = {  # batch → (lr, warmup_ratio)  [Table 4]
+    512: (5 / (2**3.0 * 1e3), 1 / 320),
+    1024: (5 / (2**2.5 * 1e3), 1 / 160),
+    2048: (5 / (2**2.0 * 1e3), 1 / 80),
+    4096: (5 / (2**1.5 * 1e3), 1 / 40),
+    8192: (5 / (2**1.0 * 1e3), 1 / 20),
+    16384: (5 / (2**0.5 * 1e3), 1 / 10),
+    32768: (5 / (2**0.0 * 1e3), 1 / 5),
+}
+
+RESNET_TABLE5 = {  # batch → lr  [Table 5, base 4/(2^3*100) @ 512]
+    512: 4 / (2**3.0 * 100),
+    32768: 4 / (2**0.0 * 100),
+}
+
+
+@pytest.mark.parametrize("batch", sorted(BERT_TABLE4))
+def test_table4_sqrt_scaling_and_warmup(batch):
+    lr, ratio = BERT_TABLE4[batch]
+    assert core.sqrt_scaled_lr(5 / (2**3 * 1e3), 512, batch) == pytest.approx(lr)
+    assert core.linear_epoch_warmup_ratio(1 / 320, 512, batch) == pytest.approx(ratio)
+
+
+def test_table4_32k_warmup_steps():
+    """Paper: batch 32K → 15625 iterations, 0.2·15625 = 3125 warmup steps."""
+    _, info = core.untuned_lamb_schedule(32768, 15625)
+    assert info["warmup_steps"] == 3125
+    assert info["learning_rate"] == pytest.approx(5e-3)
+
+
+@pytest.mark.parametrize("batch", sorted(RESNET_TABLE5))
+def test_table5_resnet_lr(batch):
+    assert core.sqrt_scaled_lr(4 / (2**3 * 100), 512, batch) == pytest.approx(
+        RESNET_TABLE5[batch]
+    )
+
+
+def test_poly_decay_endpoints():
+    s = core.polynomial_decay(1.0, 100)
+    assert float(s(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(50))) == pytest.approx(0.5)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.0)
+
+
+def test_warmup_poly_profile():
+    s = core.warmup_poly_decay(1.0, 100, 10)
+    vals = [float(s(jnp.asarray(t))) for t in range(0, 101, 5)]
+    assert vals[0] == 0.0
+    assert max(vals) == pytest.approx(1.0, abs=1e-6)
+    # monotone up then monotone down
+    peak = int(np.argmax(vals))
+    assert all(a <= b + 1e-9 for a, b in zip(vals[:peak], vals[1:peak + 1]))
+    assert all(a >= b - 1e-9 for a, b in zip(vals[peak:-1], vals[peak + 1:]))
+
+
+def test_piecewise_stage_rewarmup():
+    """Stage 2 restarts from ~0 (re-warm-up), not from stage 1's decayed LR."""
+    s1 = core.warmup_poly_decay(1.0, 50, 5)
+    s2 = core.warmup_poly_decay(0.7, 50, 10)
+    s = core.piecewise_stage_schedule([s1, s2], [50, 50])
+    end_stage1 = float(s(jnp.asarray(49)))
+    start_stage2 = float(s(jnp.asarray(50)))
+    assert start_stage2 < 0.1  # re-warmed from zero
+    assert float(s(jnp.asarray(60))) == pytest.approx(0.7, rel=1e-5)
+
+
+def test_goyal_schedule():
+    s = core.goyal_step_schedule(1.0, steps_per_epoch=10)
+    assert float(s(jnp.asarray(25))) == pytest.approx(0.5)     # mid warmup
+    assert float(s(jnp.asarray(100))) == pytest.approx(1.0)    # after warmup
+    assert float(s(jnp.asarray(350))) == pytest.approx(0.1)    # after 30 epochs
+    assert float(s(jnp.asarray(650))) == pytest.approx(0.01)   # after 60
+    assert float(s(jnp.asarray(850))) == pytest.approx(0.001)  # after 80
+
+
+def test_adam_correction_equivalent_lr_looks_like_warmup():
+    """App. E: the implicit factor starts small and approaches 1 — a warmup."""
+    ts = jnp.arange(0, 5000, 10)
+    f = np.asarray(core.adam_correction_equivalent_lr(ts))
+    assert f[0] < 0.5          # strongly damped early steps
+    assert abs(f[-1] - 1.0) < 0.05  # approaches the nominal LR
+    assert f[-1] > f[0]
+
+
+def test_mixed_batch_plan_matches_paper():
+    """§4.1: 64K/32K mixed-batch, 8599 total iterations, stage-2 re-warmup."""
+    plan = core.bert_mixed_batch_plan()
+    assert plan[0].batch_size == 65536 and plan[0].seq_len == 128
+    assert plan[1].batch_size == 32768 and plan[1].seq_len == 512
+    assert plan[0].steps + plan[1].steps == 8599
+    # sqrt-scaled LRs from the 512-batch base
+    assert plan[0].learning_rate == pytest.approx(
+        core.sqrt_scaled_lr(5 / (2**3 * 1e3), 512, 65536)
+    )
+    assert plan[1].warmup_steps > 0  # re-warm-up exists

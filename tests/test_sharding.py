@@ -1,0 +1,136 @@
+"""Sharding resolution + roofline parsing + (subprocess) production dry-run."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.sharding import default_act_rules, default_param_rules, resolve_spec
+
+MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
+MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_fsdp_and_tp_resolution():
+    rules = default_param_rules(multi_pod=False)
+    spec = resolve_spec((960, 2560), ("embed", "ff"), rules, MESH_1POD)
+    assert spec == P("data", "model")
+
+
+def test_mqa_kv_head_fallback_replicates():
+    rules = default_param_rules()
+    spec = resolve_spec((6144, 1, 128), ("embed", "kv_heads", "head_dim"),
+                        rules, MESH_1POD)
+    assert spec == P("data")  # kv=1 can't shard on model → dropped
+
+
+def test_odd_head_count_fallback():
+    rules = default_param_rules()
+    spec = resolve_spec((960, 15, 64), ("embed", "heads", "head_dim"),
+                        rules, MESH_1POD)
+    assert spec == P("data")
+
+
+def test_multi_pod_fsdp_uses_both_axes():
+    rules = default_param_rules(multi_pod=True)
+    spec = resolve_spec((8192, 22528), ("embed", "ff"), rules, MESH_2POD)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_no_mesh_axis_reuse():
+    rules = {"a": ("data",), "b": ("data", "model")}
+    spec = resolve_spec((32, 32), ("a", "b"), rules, MESH_1POD)
+    flat = []
+    for e in spec:
+        if e is None:
+            continue
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    assert len(flat) == len(set(flat))
+
+
+def test_cache_seq_takes_leftover_axis():
+    """batch=1 long-context decode: cache seq shards over data instead."""
+    rules = default_act_rules()
+    rules["cache_seq"] = ("pod", "data")
+    # batch 128: data used by batch; cache_seq replicates; kv 16 shards
+    s1 = resolve_spec((32, 128, 32768, 16, 128),
+                      (None, "batch", "cache_seq", "kv_heads", None),
+                      rules, MESH_1POD)
+    assert s1 == P(None, "data", None, "model")
+    # batch 1: batch unshardable, cache_seq takes data; kv=8 < 16 replicates
+    s2 = resolve_spec((32, 1, 524288, 8, 128),
+                      (None, "batch", "cache_seq", "kv_heads", None),
+                      rules, MESH_1POD)
+    assert s2 == P(None, None, "data")
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parsing
+# ---------------------------------------------------------------------------
+
+def test_collective_bytes_parser():
+    from repro.launch.roofline import collective_bytes
+
+    hlo = """
+  %ar = f32[256,64]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[8,8]<=[64]
+  %ag = bf16[128,32]{1,0} all-gather(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %rs = f32[16,16]{1,0} reduce-scatter(%y), replica_groups=[4,16]<=[64]
+  %cp = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %done = f32[128,32]{1,0} all-gather-done(%ag_start)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 256 * 64 * 4
+    assert out["all-gather"] == 128 * 32 * 2 // 4
+    assert out["reduce-scatter"] == 16 * 16 * 4 * 16
+    assert out["collective-permute"] == 8 * 4
+    assert out["count"] == 4  # -done not double counted
+
+
+def test_roofline_terms_math():
+    from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, analyze
+
+    cost = {"flops": PEAK_FLOPS, "bytes accessed": HBM_BW / 2}
+    rf = analyze(cost, "", model_flops_per_device=PEAK_FLOPS / 2)
+    assert rf.compute_s == pytest.approx(1.0)
+    assert rf.memory_s == pytest.approx(0.5)
+    assert rf.dominant == "compute"
+    assert rf.useful_fraction == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# production dry-run (subprocess — needs its own XLA_FLAGS before jax import)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_production_dryrun_subprocess(tmp_path):
+    """Lower+compile smollm decode_32k on the full 256-chip mesh."""
+    out = tmp_path / "dry.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "smollm-360m", "--shape", "decode_32k",
+         "--out", str(out), "--tag", "unit"],
+        capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["devices"] == 256
+    assert rec["roofline"]["memory_s"] > 0
+    assert rec["cost"]["flops"] > 0
+
+
+def test_abstract_params_follow_param_dtype():
+    from repro.configs import smoke_config
+    from repro.models import build_model
+
+    m = build_model(smoke_config("smollm-360m").replace(param_dtype="bfloat16"))
+    leaves = jax.tree.leaves(m.abstract_params())
+    assert all(l.dtype == "bfloat16" for l in leaves)

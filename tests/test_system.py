@@ -1,0 +1,208 @@
+"""End-to-end system tests: data determinism, checkpoint roundtrip,
+mixed-batch staging, training convergence, serving."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, smoke_config
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data import DataPipeline, SyntheticLM, batch_iterator, make_batch
+from repro.models import build_model
+from repro.serve import Engine, Request
+from repro.train import Trainer, make_train_step
+from tests.conftest import tiny_dense
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_across_runs():
+    cfg = tiny_dense()
+    it1 = batch_iterator(cfg, 4, 16, seed=7)
+    it2 = batch_iterator(cfg, 4, 16, seed=7)
+    for _ in range(3):
+        b1, b2 = next(it1), next(it2)
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b2[k])
+
+
+def test_data_host_sharding_disjoint():
+    cfg = tiny_dense()
+    full = next(batch_iterator(cfg, 4, 16, seed=3, host_index=0, host_count=1))
+    h0 = next(batch_iterator(cfg, 4, 16, seed=3, host_index=0, host_count=2))
+    h1 = next(batch_iterator(cfg, 4, 16, seed=3, host_index=1, host_count=2))
+    assert h0["tokens"].shape[0] == 2 and h1["tokens"].shape[0] == 2
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_lm_labels_are_next_tokens():
+    cfg = tiny_dense()
+    src = SyntheticLM(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+    from repro.data import lm_batch
+
+    b = lm_batch(src, rng, 2, 16)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+
+
+def test_mlm_masking_stats():
+    cfg = get_config("bert-large").replace(vocab_size=512)
+    rng = np.random.default_rng(0)
+    b = make_batch(cfg, rng, 8, 128)
+    frac = (b["labels"] >= 0).mean()
+    assert 0.10 < frac < 0.22  # ~15% masked
+    # corrupted at [MASK]=3 for ~80% of targets
+    sel = b["labels"] >= 0
+    mask_frac = (b["tokens"][sel] == 3).mean()
+    assert 0.6 < mask_frac < 0.95
+
+
+def test_audio_batch_learnable_targets():
+    cfg = smoke_config("hubert-xlarge")
+    rng = np.random.default_rng(0)
+    b = make_batch(cfg, rng, 2, 32)
+    assert b["frame_embeds"].shape == (2, 32, cfg.d_model)
+    assert b["labels"].max() < cfg.vocab_size
+    assert b["mask"].any()
+
+
+def test_zipf_marginals_are_skewed():
+    src = SyntheticLM(512, seed=0)
+    toks = src.tokens(np.random.default_rng(0), 8, 256)
+    counts = np.bincount(toks.ravel(), minlength=512)
+    top = np.sort(counts)[::-1]
+    # markov mixing flattens the aggregate marginal, but it must remain far
+    # from uniform (uniform top-16 share = 16/512 ≈ 3.1%)
+    assert top[:16].sum() > 0.08 * counts.sum()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_with_opt_state(key):
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    init_fn, step_fn = make_train_step(model, tc)
+    state = init_fn(key)
+    batch = jax.tree.map(jnp.asarray, make_batch(cfg, np.random.default_rng(0), 2, 16))
+    state, _ = jax.jit(step_fn)(state, batch)
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, state)
+        target = jax.eval_shape(lambda: state)
+        restored = restore_checkpoint(latest_checkpoint(d), target)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(key):
+    params = {"w": jnp.ones((4, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 0, params)
+        bad = {"w": jax.ShapeDtypeStruct((2, 2), jnp.float32)}
+        with pytest.raises(ValueError):
+            restore_checkpoint(latest_checkpoint(d), bad)
+
+
+# ---------------------------------------------------------------------------
+# training end-to-end
+# ---------------------------------------------------------------------------
+
+def test_lamb_training_decreases_loss():
+    """Fixed-batch memorization: loss must fall fast under LAMB."""
+    import itertools
+
+    cfg = tiny_dense(n_layers=2, d_model=128, vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-2)
+    sched = core.warmup_poly_decay(1e-2, 60, 6)
+    tr = Trainer(model, tc, schedule=sched, log_every=1, log_fn=lambda s: None)
+    batch = make_batch(cfg, np.random.default_rng(0), 8, 32)
+    hist = tr.fit(itertools.repeat(batch), 60)
+    first, last = hist[0]["loss/total"], hist[-1]["loss/total"]
+    assert last < first - 0.5, (first, last)
+
+
+def test_microbatched_grads_match_full_batch(key):
+    cfg = tiny_dense(activation_dtype="float32")
+    model = build_model(cfg)
+    batch = jax.tree.map(jnp.asarray, make_batch(cfg, np.random.default_rng(0), 4, 16))
+    tc_full = TrainConfig(optimizer="lamb", learning_rate=1e-3, grad_clip_norm=None)
+    tc_micro = TrainConfig(optimizer="lamb", learning_rate=1e-3,
+                           grad_clip_norm=None, microbatch=2)
+    i1, s1 = make_train_step(model, tc_full)
+    i2, s2 = make_train_step(model, tc_micro)
+    st1, st2 = i1(key), i2(key)
+    st1b, m1 = jax.jit(s1)(st1, batch)
+    st2b, m2 = jax.jit(s2)(st2, batch)
+    for a, b in zip(jax.tree.leaves(st1b.params), jax.tree.leaves(st2b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_mixed_batch_stages_rewarmup():
+    """fit_stages switches (seq, batch) shapes and re-warms up stage 2."""
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    stages = [
+        core.make_stage("s1", 16, 8, 6, base_lr=1e-3, base_batch=8,
+                        base_warmup_ratio=0.25),
+        core.make_stage("s2", 32, 4, 6, base_lr=1e-3, base_batch=8,
+                        base_warmup_ratio=0.25),
+    ]
+    tr = Trainer(model, tc, log_every=1, log_fn=lambda s: None)
+    hist = tr.fit_stages(stages)
+    assert int(tr.state.step) == 12
+    assert any(h.get("stage") == 1 for h in hist)
+    # moments carried across stages: second stage starts from trained params
+    assert np.isfinite(hist[-1]["loss/total"])
+
+
+def test_trust_ratio_logging():
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, log_trust_ratios=True)
+    init_fn, step_fn = make_train_step(model, tc)
+    state = init_fn(jax.random.key(0))
+    batch = jax.tree.map(jnp.asarray, make_batch(cfg, np.random.default_rng(0), 2, 16))
+    _, metrics = jax.jit(step_fn)(state, batch)
+    assert "trust_ratio/mean" in metrics
+    assert float(metrics["trust_ratio/min"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_engine_greedy_deterministic(key):
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    params = model.init(key)
+    eng = Engine(model, params, max_len=48)
+    prompts = [np.arange(4, dtype=np.int32), np.arange(6, dtype=np.int32)]
+    r1 = eng.generate_batch([Request(p, max_new_tokens=6) for p in prompts])
+    r2 = eng.generate_batch([Request(p, max_new_tokens=6) for p in prompts])
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.out_tokens, b.out_tokens)
+
+
+def test_engine_decode_matches_forward(key):
+    """Greedy engine's first generated token == argmax of plain forward."""
+    cfg = tiny_dense(activation_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(key)
+    prompt = np.arange(8, dtype=np.int32)
+    logits, _ = model.apply(params, {"tokens": jnp.asarray(prompt)[None]})
+    want = int(jnp.argmax(logits[0, -1]))
+    eng = Engine(model, params, max_len=32)
+    out = eng.generate_batch([Request(prompt, max_new_tokens=1)])
+    assert int(out[0].out_tokens[0]) == want
