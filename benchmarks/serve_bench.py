@@ -1,0 +1,192 @@
+"""Static vs continuous batching under staggered arrivals.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--requests 12 --slots 4]
+
+Two servers over the same smoke model and the same Poisson-arrival workload
+(mixed prompt lengths and generation budgets):
+
+* static  — a fixed-shape batch server: collects whatever has arrived (up to
+  the slot count), pads the batch to a fixed (slots, max_prompt) shape, and
+  blocks until the slowest request in the batch finishes before admitting
+  more work (the pre-PR ``Engine`` driven the only way it can be);
+* continuous — the slot-pool ``ContinuousEngine``: admits work between
+  single-token steps, so a finished slot is refilled immediately.
+
+Both engines are jit-warmed on every shape they will see before the timed
+run, so the comparison is steady-state step cost, not compile time.  The
+script also checks greedy token-for-token equivalence between the two
+engines on a shared same-length request set (see the determinism caveat in
+``repro/serve/continuous.py`` — row-independent families match exactly).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serve import (
+    ContinuousEngine,
+    Engine,
+    FCFSScheduler,
+    Request,
+    ServeRequest,
+    assign_arrivals,
+    poisson_arrivals,
+    serving_stats,
+)
+
+
+def make_workload(n: int, seed: int, prompt_lens=(8, 12, 16),
+                  max_new=(4, 8, 12, 32)) -> List[ServeRequest]:
+    rng = np.random.default_rng(seed)
+    return [
+        ServeRequest(
+            prompt=rng.integers(0, 256, size=int(rng.choice(prompt_lens)))
+            .astype(np.int32),
+            max_new_tokens=int(rng.choice(max_new)),
+        )
+        for _ in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# static-batch server simulation
+# ---------------------------------------------------------------------------
+
+def run_static(model, params, workload: List[ServeRequest], *, slots: int,
+               max_len: int) -> List[ServeRequest]:
+    """Fixed-shape batch server: every batch is exactly (slots, max_prompt)
+    tokens (filler rows + prompt padding keep the jit cache at one entry),
+    decoded to the batch's max max_new_tokens, results sliced per request."""
+    eng = Engine(model, params, max_len=max_len)
+    pad_s = max(len(r.prompt) for r in workload)
+
+    def to_static(r: ServeRequest) -> Request:
+        p = np.zeros(pad_s, np.int32)
+        p[: len(r.prompt)] = r.prompt
+        return Request(p, max_new_tokens=r.max_new_tokens,
+                       temperature=r.temperature)
+
+    # warm the (slots, pad_s) prefill/decode jit once, untimed
+    eng.generate_batch([to_static(workload[0]) for _ in range(slots)])
+
+    pending = sorted(workload, key=lambda r: (r.arrival_s, r.rid))
+    clock = 0.0
+    done: List[ServeRequest] = []
+    while pending:
+        arrived = [r for r in pending if r.arrival_s <= clock]
+        if not arrived:
+            clock = pending[0].arrival_s  # idle: jump to next arrival
+            continue
+        batch = arrived[:slots]
+        filler = [batch[0]] * (slots - len(batch))  # fixed batch shape
+        t0 = time.perf_counter()
+        out = eng.generate_batch([to_static(r) for r in batch + filler])
+        clock += time.perf_counter() - t0
+        for req, res in zip(batch, out):
+            req.out_tokens = list(map(int, res.out_tokens))
+            req.first_token_s = clock  # static batch: nothing streams early
+            req.finish_s = clock
+            pending.remove(req)
+            done.append(req)
+    return done
+
+
+# ---------------------------------------------------------------------------
+# continuous server
+# ---------------------------------------------------------------------------
+
+def run_continuous(model, params, workload: List[ServeRequest], *, slots: int,
+                   max_len: int, warm_lens) -> List[ServeRequest]:
+    eng = ContinuousEngine(model, params, n_slots=slots, max_len=max_len,
+                           scheduler=FCFSScheduler())
+    # warm every prompt-length prefill + the decode step, untimed
+    warm = [ServeRequest(np.zeros(s, np.int32), max_new_tokens=2)
+            for s in warm_lens]
+    eng.generate(warm)
+    assert eng.pool.n_free == slots, "warmup drained the pool"
+    return eng.generate(workload)
+
+
+# ---------------------------------------------------------------------------
+# greedy equivalence on a shared same-length request set
+# ---------------------------------------------------------------------------
+
+def check_equivalence(model, params, *, n: int = 6, prompt_len: int = 12,
+                      slots: int = 3, max_len: int = 64, seed: int = 7) -> bool:
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 256, size=prompt_len).astype(np.int32)
+               for _ in range(n)]
+    new = [int(x) for x in rng.integers(4, 12, size=n)]
+    eng = Engine(model, params, max_len=max_len)
+    ref = eng.generate_batch(
+        [Request(p, max_new_tokens=m) for p, m in zip(prompts, new)])
+    ce = ContinuousEngine(model, params, n_slots=slots, max_len=max_len)
+    out = ce.generate(
+        [ServeRequest(p, max_new_tokens=m) for p, m in zip(prompts, new)])
+    return all(
+        np.array_equal(np.asarray(r.out_tokens), np.asarray(s.out_tokens))
+        for r, s in zip(out, ref)
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--arrival-rate", type=float, default=25.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    print(f"model={cfg.name} ({model.param_count()/1e6:.2f}M) "
+          f"requests={args.requests} slots={args.slots} "
+          f"rate={args.arrival_rate}/s")
+
+    workload = make_workload(args.requests, args.seed)
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in workload) + 8
+    arrivals = poisson_arrivals(len(workload), args.arrival_rate,
+                                seed=args.seed)
+
+    def fresh():
+        ws = make_workload(args.requests, args.seed)
+        for i, r in enumerate(ws):
+            r.rid = i
+        return assign_arrivals(ws, arrivals)
+
+    static_done = run_static(model, params, fresh(), slots=args.slots,
+                             max_len=max_len)
+    cont_done = run_continuous(
+        model, params, fresh(), slots=args.slots, max_len=max_len,
+        warm_lens=sorted({len(r.prompt) for r in workload}),
+    )
+
+    s_stats = serving_stats(static_done)
+    c_stats = serving_stats(cont_done)
+    print(f"\n{'':12s} {'tok/s':>8s} {'p50 lat':>9s} {'p99 lat':>9s} "
+          f"{'p50 ttft':>9s}")
+    for name, st in (("static", s_stats), ("continuous", c_stats)):
+        print(f"{name:12s} {st['tokens_per_s']:8.2f} "
+              f"{st['latency_p50_s']:8.3f}s {st['latency_p99_s']:8.3f}s "
+              f"{st['ttft_p50_s']:8.3f}s")
+
+    speedup = c_stats["tokens_per_s"] / max(s_stats["tokens_per_s"], 1e-9)
+    print(f"\ncontinuous/static tokens/s: {speedup:.2f}x "
+          f"-> {'PASS' if speedup > 1.0 else 'FAIL'} (want > 1.0)")
+
+    eq = check_equivalence(model, params)
+    print(f"greedy continuous == static (shared request set): "
+          f"{'PASS' if eq else 'FAIL'}")
+    return 0 if (speedup > 1.0 and eq) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,76 @@
+"""Continuous-batching serving example: slot pool + streaming callbacks.
+
+    PYTHONPATH=src python examples/serve_continuous.py [--arch smollm-360m]
+
+Requests with mixed prompt lengths, generation budgets, and temperatures
+arrive over a Poisson process; the engine keeps a fixed-shape decode batch
+full by swapping finished slots for queued requests between steps, streaming
+each token to a callback as it is sampled.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serve import (
+    ContinuousEngine,
+    FCFSScheduler,
+    ServeRequest,
+    assign_arrivals,
+    poisson_arrivals,
+    serving_stats,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--arrival-rate", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    print(f"serving {cfg.name} ({model.param_count()/1e6:.2f}M params) "
+          f"on {args.slots} slots")
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        ServeRequest(
+            prompt=rng.integers(0, 256, size=int(rng.integers(6, 14))).astype(
+                np.int32),
+            max_new_tokens=int(rng.integers(4, 12)),
+            temperature=float(rng.choice([0.0, 0.8])),
+        )
+        for _ in range(args.requests)
+    ]
+    assign_arrivals(
+        reqs, poisson_arrivals(len(reqs), args.arrival_rate, seed=args.seed))
+
+    streamed = {}
+
+    def on_token(req, tok):
+        streamed.setdefault(req.rid, []).append(tok)
+
+    eng = ContinuousEngine(
+        model, params, n_slots=args.slots,
+        max_len=32, seed=args.seed, scheduler=FCFSScheduler(),
+    )
+    out = eng.generate(reqs, on_token=on_token)
+
+    for r in out:
+        assert streamed[r.rid] == r.out_tokens  # stream == final output
+        print(f"req[{r.rid}] prompt={len(r.prompt):2d} "
+              f"new={len(r.out_tokens):2d} temp={r.temperature:.1f} "
+              f"ttft={r.ttft_s*1e3:6.1f}ms lat={r.latency_s*1e3:6.1f}ms "
+              f"-> {np.asarray(r.out_tokens[:8])}")
+    print("stats:", serving_stats(out))
+
+
+if __name__ == "__main__":
+    main()

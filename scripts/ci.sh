@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a fast serving smoke.
+#
+#   scripts/ci.sh          # full tier-1 (includes the slow dry-run test)
+#   CI_FAST=1 scripts/ci.sh  # skip the slow production dry-run subprocess
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [[ -n "${CI_FAST:-}" ]]; then
+  python -m pytest -x -q -m "not slow"
+else
+  python -m pytest -x -q
+fi
+
+# continuous-batching serving smoke: tiny workload, must stream and drain
+python examples/serve_continuous.py --requests 4 --slots 2 --arrival-rate 50
+
+echo "ci.sh: OK"

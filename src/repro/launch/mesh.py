@@ -12,20 +12,26 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across API generations: newer releases expose
+    jax.sharding.AxisType and expect explicit axis_types; jax 0.4.x has
+    neither (all axes are implicitly auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Degenerate mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,7 +1,12 @@
-"""Serving launcher: batched greedy generation on a (smoke) model.
+"""Serving launcher: static-batch or continuous-batching generation.
 
+    # static batch (pad everything to one shape, block until done)
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --requests 8 --prompt-len 16 --max-new 32
+
+    # continuous batching over a slot pool with Poisson arrivals
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+        --continuous --slots 4 --arrival-rate 8 --requests 16
 """
 from __future__ import annotations
 
@@ -12,7 +17,16 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import build_model
-from repro.serve import Engine, Request
+from repro.serve import (
+    ContinuousEngine,
+    Engine,
+    FCFSScheduler,
+    Request,
+    ServeRequest,
+    assign_arrivals,
+    poisson_arrivals,
+    serving_stats,
+)
 
 
 def main() -> None:
@@ -24,6 +38,15 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a KV slot pool")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (continuous mode)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson request rate in req/s (0 = all at once)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="admission deadline in seconds (continuous mode)")
+    ap.add_argument("--max-prefills-per-step", type=int, default=2)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -33,17 +56,41 @@ def main() -> None:
     params = model.init(jax.random.key(args.seed))
     print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M")
 
-    eng = Engine(model, params,
-                 max_len=args.prompt_len + args.max_new + 8, seed=args.seed)
     rng = np.random.default_rng(args.seed)
-    reqs = [
-        Request(
-            prompt=rng.integers(0, min(cfg.vocab_size, 1024),
-                                size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
-            temperature=args.temperature,
-        )
+    max_len = args.prompt_len + args.max_new + 8
+    prompts = [
+        rng.integers(0, min(cfg.vocab_size, 1024),
+                     size=args.prompt_len).astype(np.int32)
         for _ in range(args.requests)
+    ]
+
+    if args.continuous:
+        eng = ContinuousEngine(
+            model, params, n_slots=args.slots, max_len=max_len,
+            seed=args.seed,
+            scheduler=FCFSScheduler(args.max_prefills_per_step),
+        )
+        reqs = [
+            ServeRequest(p, max_new_tokens=args.max_new,
+                         temperature=args.temperature,
+                         deadline_s=args.deadline)
+            for p in prompts
+        ]
+        assign_arrivals(
+            reqs, poisson_arrivals(len(reqs), args.arrival_rate,
+                                   seed=args.seed))
+        out = eng.generate(reqs)
+        for i, r in enumerate(out[:4]):
+            print(f"req[{i}] (+{r.arrival_s:.3f}s) -> "
+                  f"{np.asarray(r.out_tokens[:16])}...")
+        print(f"stats: {serving_stats(out)}")
+        return
+
+    eng = Engine(model, params, max_len=max_len, seed=args.seed)
+    reqs = [
+        Request(prompt=p, max_new_tokens=args.max_new,
+                temperature=args.temperature)
+        for p in prompts
     ]
     out = eng.generate_batch(reqs)
     stats = eng.throughput_stats(out)

@@ -125,17 +125,26 @@ def attention(
 
     new_cache = None
     if cache is not None and decode:
-        # single-token decode: scatter k,v at `index`, attend over full cache
-        idx = cache["index"]  # scalar int32: current length
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, idx, 0, 0))
-        new_cache = {"k": ck, "v": cv, "index": idx + x.shape[1]}
+        # single-token decode: scatter k,v at `index`, attend over full cache.
+        # `index` is a scalar (whole batch at one length: static engine) or a
+        # (B,) vector (per-slot lengths: continuous-batching KV pool).
+        idx = cache["index"]
+        if jnp.ndim(idx) == 0:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            valid = idx + x.shape[1]
+        else:
+            assert x.shape[1] == 1, "per-slot decode is single-token"
+            rows = jnp.arange(x.shape[0])
+            ck = cache["k"].at[rows, idx].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, idx].set(v[:, 0].astype(cache["v"].dtype))
+            valid = idx + 1
+        new_cache = {"k": ck, "v": cv, "index": valid}
         t = ck.shape[1]
         kv_pos = jnp.arange(t, dtype=jnp.int32)
-        bias = _mask_bias(positions, kv_pos, idx + x.shape[1],
-                          causal=True, window=window)
+        bias = _mask_bias(positions, kv_pos, valid, causal=True, window=window)
         out = _sdpa(q, shard_act(ck, ("batch", "cache_seq", "kv_heads", None)),
                     shard_act(cv, ("batch", "cache_seq", "kv_heads", None)),
                     bias, cfg.n_kv_heads, cfg.logit_softcap)

@@ -72,7 +72,9 @@ def _mask(positions, t, valid_len):
     q = positions[:, :, None]
     ok = kv_pos <= q
     if valid_len is not None:
-        ok &= kv_pos < valid_len
+        valid = jnp.asarray(valid_len)
+        valid = valid[:, None, None] if valid.ndim == 1 else valid
+        ok &= kv_pos < valid
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None]  # (B,1,S,T)
 
 
@@ -94,12 +96,23 @@ def mla_attention(
 
     new_cache = None
     if cache is not None:
+        # `index` is a scalar (shared length) or (B,) per-slot lengths — see
+        # attention.py; the KV pool drives the per-slot form.
         idx = cache["index"] if decode else jnp.asarray(0, jnp.int32)
-        ckv = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
-        ckr = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, idx, 0))
-        valid = idx + x.shape[1]
+        if jnp.ndim(idx) == 0:
+            ckv = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
+            ckr = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, idx, 0))
+            valid = idx + x.shape[1]
+        else:
+            assert x.shape[1] == 1, "per-slot decode is single-token"
+            rows = jnp.arange(x.shape[0])
+            ckv = cache["c_kv"].at[rows, idx].set(
+                c_kv[:, 0].astype(cache["c_kv"].dtype))
+            ckr = cache["k_rope"].at[rows, idx].set(
+                k_rope[:, 0].astype(cache["k_rope"].dtype))
+            valid = idx + 1
         new_cache = {"c_kv": ckv, "k_rope": ckr, "index": valid}
         kv_src, kr_src = ckv.astype(dtype), ckr.astype(dtype)
         bias = _mask(positions, ckv.shape[1], valid)

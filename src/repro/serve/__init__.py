@@ -1,3 +1,35 @@
+from repro.serve.continuous import (
+    ContinuousEngine,
+    make_pool_decode_step,
+    make_pool_prefill,
+    serving_stats,
+)
 from repro.serve.engine import Engine, Request, make_decode_step, make_prefill_step
+from repro.serve.kv_pool import KVPool
+from repro.serve.sampling import sample_tokens, top_k_mask
+from repro.serve.scheduler import (
+    FCFSScheduler,
+    ServeRequest,
+    assign_arrivals,
+    poisson_arrivals,
+    trace_arrivals,
+)
 
-__all__ = ["Engine", "Request", "make_decode_step", "make_prefill_step"]
+__all__ = [
+    "ContinuousEngine",
+    "Engine",
+    "FCFSScheduler",
+    "KVPool",
+    "Request",
+    "ServeRequest",
+    "assign_arrivals",
+    "make_decode_step",
+    "make_pool_decode_step",
+    "make_pool_prefill",
+    "make_prefill_step",
+    "poisson_arrivals",
+    "sample_tokens",
+    "serving_stats",
+    "top_k_mask",
+    "trace_arrivals",
+]

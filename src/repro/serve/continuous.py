@@ -1,0 +1,285 @@
+"""Continuous-batching engine: a fixed-shape decode step over a slot pool.
+
+The decode batch never drains: one jit'd single-token step runs over all
+``n_slots`` slots every iteration, and between steps finished requests are
+evicted and queued ones prefilled into the freed slots.  The decode step's
+shapes are fixed at (n_slots, 1), so slot churn never recompiles; prefill
+compiles once per distinct prompt length (exact-length prefill keeps the
+recurrent families — mamba/xLSTM state — exact, where padded prefill would
+corrupt the state with pad tokens).
+
+Per-slot sampling parameters ride in (B,) arrays through
+``sampling.sample_tokens``; per-slot termination (EOS / stop tokens /
+max_new_tokens) is checked on the host between steps.
+
+The engine's clock is wall time plus a fast-forward offset: when all slots
+are idle and the next arrival is in the future, the clock jumps there — so a
+simulated Poisson trace runs at full speed while latencies stay consistent.
+
+Determinism caveat: greedy outputs match the static ``Engine`` token-for-token
+on every row-independent family (dense/GQA/SWA, MLA, mamba/hybrid, xLSTM).
+Capacity-factor MoE couples rows — per-expert capacity and drop order depend
+on the whole batch's token count — so MoE outputs legitimately vary with
+batch composition under *any* batching scheme, including the static engine.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.serve.kv_pool import KVPool, reset_inactive
+from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import FCFSScheduler, ServeRequest
+from repro.sharding.context import ShardCtx, use_sharding
+
+TokenCallback = Callable[[ServeRequest, int], None]
+
+
+def make_pool_prefill(model: Model, max_len: int):
+    """(params, tokens(1, S)) → (last-token logits (1, V), batch-1 cache).
+
+    The cache is built at the pool's max_len so insertion into the pool is a
+    single fixed-shape dynamic_update_slice per leaf.
+    """
+
+    def prefill(params, tokens):
+        cache = model.make_cache(1, max_len)
+        logits, cache = model.prefill(params, {"tokens": tokens}, cache)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_pool_decode_step(model: Model, *, greedy: bool = False):
+    """One continuous-batching step over every slot.
+
+    tokens/positions/temps/top_k are (B,) per-slot arrays; `active` masks
+    empty slots — their sampled token is forced to 0, and their cache index
+    and position are clamped back to 0 so idle slots never advance.  All
+    per-slot arrays live on device between steps (the engine only uploads
+    them after slot churn), and the step's rng is ``fold_in(base, step_no)``
+    so the hot loop issues no host-side key splits.
+
+    ``greedy=True`` compiles an argmax-only variant (no rng / top-k sort);
+    the engine dispatches it whenever every active slot has temperature 0.
+    """
+
+    def step(params, cache, tokens, positions, active, temps, top_k,
+             base_rng, step_no):
+        logits, cache = model.decode(
+            params, {"tokens": tokens[:, None]}, cache, positions[:, None]
+        )
+        last = logits[:, -1]
+        if greedy:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            nxt = sample_tokens(jax.random.fold_in(base_rng, step_no), last,
+                                temps, top_k)
+        nxt = jnp.where(active, nxt, 0)
+        cache = reset_inactive(cache, active)
+        new_pos = jnp.where(active, positions + 1, 0)
+        return nxt, new_pos, cache
+
+    return step
+
+
+class ContinuousEngine:
+    """Slot-pool generation engine with mid-decode admission."""
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        n_slots: int = 8,
+        max_len: int = 512,
+        shard_ctx: Optional[ShardCtx] = None,
+        seed: int = 0,
+        scheduler: Optional[FCFSScheduler] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.shard_ctx = shard_ctx
+        self.rng = jax.random.key(seed)
+        self.scheduler = scheduler or FCFSScheduler()
+        self.pool = KVPool(model, n_slots, max_len)
+        self._prefill = jax.jit(make_pool_prefill(model, max_len))
+        self._decode_sample = jax.jit(
+            make_pool_decode_step(model), donate_argnums=(1,)
+        )
+        self._decode_greedy = jax.jit(
+            make_pool_decode_step(model, greedy=True), donate_argnums=(1,)
+        )
+        # per-slot host mirrors; device copies are refreshed lazily (only
+        # after slot churn) so steady-state steps upload nothing
+        self._slot_req: Dict[int, ServeRequest] = {}
+        self._tokens = np.zeros(n_slots, np.int32)
+        self._temps = np.zeros(n_slots, np.float32)
+        self._top_k = np.zeros(n_slots, np.int32)
+        self._dev: Optional[tuple] = None  # (tokens, positions, active, temps, top_k)
+        self._step_no = 0
+
+    # ---- internals -------------------------------------------------------
+    def _next_key(self) -> jax.Array:
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def _device_state(self) -> tuple:
+        if self._dev is None:
+            self._dev = (
+                jnp.asarray(self._tokens),
+                jnp.asarray(self.pool.lengths),
+                jnp.asarray(self.pool.active_mask),
+                jnp.asarray(self._temps),
+                jnp.asarray(self._top_k),
+            )
+        return self._dev
+
+    def _finished(self, req: ServeRequest, tok: int) -> bool:
+        if req.eos_token is not None and tok == req.eos_token:
+            return True
+        return len(req.out_tokens) >= req.max_new_tokens
+
+    def _finish(self, slot: int, now: float) -> None:
+        req = self._slot_req.pop(slot)
+        req.finish_s = now
+        self.pool.evict(slot)
+        self._dev = None  # slot churn: device per-slot state is stale
+
+    def _admit_one(
+        self, req: ServeRequest, clock: Callable[[], float],
+        on_token: Optional[TokenCallback],
+    ) -> None:
+        slot = self.pool.acquire()
+        assert slot is not None, "admit() respects free-slot budget"
+        prompt = np.asarray(req.prompt, np.int32)
+        last, cache1 = self._prefill(self.params, jnp.asarray(prompt[None]))
+        tok = int(
+            sample_tokens(
+                self._next_key(), last,
+                jnp.full((1,), req.temperature, jnp.float32),
+                jnp.full((1,), req.top_k, jnp.int32),
+            )[0]
+        )
+        self.pool.insert(cache1, slot, len(prompt))
+        req.out_tokens.append(tok)
+        # the int() above blocked on the prefill: stamp after, not before
+        req.first_token_s = clock()
+        if on_token is not None:
+            on_token(req, tok)
+        if self._finished(req, tok):
+            self._slot_req[slot] = req
+            self._finish(slot, req.first_token_s)
+            return
+        self._slot_req[slot] = req
+        self._tokens[slot] = tok
+        self._temps[slot] = req.temperature
+        self._top_k[slot] = req.top_k
+        self._dev = None  # slot churn: device per-slot state is stale
+
+    def _step(
+        self, clock: Callable[[], float], on_token: Optional[TokenCallback]
+    ) -> None:
+        active = self.pool.active_mask.copy()
+        tokens_d, pos_d, active_d, temps_d, topk_d = self._device_state()
+        decode = (
+            self._decode_greedy
+            if float(self._temps[active].max(initial=0.0)) <= 0.0
+            else self._decode_sample
+        )
+        toks_d, pos_d, self.pool.cache = decode(
+            self.params, self.pool.cache, tokens_d, pos_d, active_d,
+            temps_d, topk_d, self.rng, np.int32(self._step_no),
+        )
+        self._step_no += 1
+        toks = np.asarray(toks_d)  # the loop's one device→host sync
+        now = clock()  # after the sync: timestamps include the step's work
+        self.pool.lengths[active] += 1
+        self._tokens[active] = toks[active]
+        # feed the sampled tokens straight back; invalidated on churn below
+        self._dev = (toks_d, pos_d, active_d, temps_d, topk_d)
+        for slot in list(self._slot_req):
+            req = self._slot_req[slot]
+            tok = int(toks[slot])
+            req.out_tokens.append(tok)
+            if on_token is not None:
+                on_token(req, tok)
+            if self._finished(req, tok):
+                self._finish(slot, now)
+
+    # ---- public API ------------------------------------------------------
+    def submit(self, req: ServeRequest) -> ServeRequest:
+        if len(req.prompt) < 1:
+            raise ValueError("prompt must hold at least one token")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the prefill "
+                             "always samples one token)")
+        # the last sampled token is returned but never written to the cache
+        need = len(req.prompt) + req.max_new_tokens - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions but pool max_len is "
+                f"{self.max_len}"
+            )
+        return self.scheduler.submit(req)
+
+    def generate(
+        self,
+        requests: Optional[Sequence[ServeRequest]] = None,
+        *,
+        on_token: Optional[TokenCallback] = None,
+    ) -> List[ServeRequest]:
+        """Run until the queue and all slots drain.  Returns the requests
+        (completed in place; check ``.dropped`` for deadline casualties)."""
+        submitted = [self.submit(r) for r in requests] if requests else []
+        t0 = time.perf_counter()
+        offset = 0.0  # virtual fast-forward while idle
+
+        def clock() -> float:
+            return time.perf_counter() - t0 + offset
+
+        with use_sharding(self.shard_ctx):
+            while self.scheduler.has_pending() or self._slot_req:
+                now = clock()
+                admitted, _dropped = self.scheduler.admit(now, self.pool.n_free)
+                for req in admitted:
+                    self._admit_one(req, clock, on_token)
+                if not self._slot_req:
+                    nxt = self.scheduler.next_arrival()
+                    if nxt is None:
+                        break
+                    offset += max(0.0, nxt - clock())
+                    continue
+                self._step(clock, on_token)
+        return submitted
+
+
+def serving_stats(requests: Sequence[ServeRequest]) -> Dict[str, float]:
+    """Aggregate throughput/latency over a completed request set."""
+    done = [r for r in requests if not r.dropped and r.out_tokens]
+    if not done:
+        return {"requests": 0, "dropped": sum(r.dropped for r in requests)}
+    new_tokens = sum(len(r.out_tokens) for r in done)
+    start = min(r.arrival_s for r in done)
+    end = max(r.finish_s for r in done)
+    lat = np.array([r.latency_s for r in done])
+    ttft = np.array([r.ttft_s for r in done])
+    wall = max(end - start, 1e-9)
+    return {
+        "requests": len(done),
+        "dropped": sum(r.dropped for r in requests),
+        "new_tokens": new_tokens,
+        "wall_s": wall,
+        "tokens_per_s": new_tokens / wall,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+    }

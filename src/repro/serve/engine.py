@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import Model
+from repro.serve.sampling import sample_tokens
 from repro.sharding.context import ShardCtx, use_sharding
 
 
@@ -68,11 +69,10 @@ class Engine:
         self._prefill = jax.jit(make_prefill_step(model))
         self._decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
 
-    def _sample(self, logits, temperature: float):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
+    def _sample(self, logits, temperatures: jnp.ndarray):
+        """Per-row sampling: each request keeps its own temperature."""
         self.rng, sub = jax.random.split(self.rng)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        return sample_tokens(sub, logits, temperatures)
 
     def generate_batch(self, requests: List[Request]) -> List[Request]:
         """Pad prompts to a common length, prefill once, decode greedily."""
@@ -83,19 +83,26 @@ class Engine:
         for i, r in enumerate(requests):
             toks[i, : len(r.prompt)] = r.prompt  # left-aligned, zero-padded
         max_new = max(r.max_new_tokens for r in requests)
+        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+        # all-greedy (the default): skip sampling and leave the rng untouched
+        greedy = max(r.temperature for r in requests) <= 0.0
+        sample = (
+            (lambda logits: jnp.argmax(logits, axis=-1)) if greedy
+            else (lambda logits: self._sample(logits, temps))
+        )
 
         with use_sharding(self.shard_ctx):
             cache = self.model.make_cache(b, self.max_len)
             last, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)}, cache)
             out = np.zeros((b, max_new), np.int32)
-            tok = self._sample(last, requests[0].temperature)
+            tok = sample(last)
             for t in range(max_new):
                 out[:, t] = np.asarray(tok)
                 positions = jnp.full((b, 1), s + t, jnp.int32)
                 last, cache = self._decode(
                     self.params, cache, tok[:, None].astype(jnp.int32), positions
                 )
-                tok = self._sample(last, requests[0].temperature)
+                tok = sample(last)
 
         dt = time.perf_counter() - t0
         for i, r in enumerate(requests):

@@ -1,0 +1,146 @@
+"""Slot-based KV cache pool for continuous batching.
+
+The pool holds one ``Model.make_cache`` pytree whose batch axis is the slot
+axis — every cache family (dense/GQA KV, MLA latent, mamba/xLSTM recurrent
+state, hybrid mixtures) goes through it unchanged.  Two representation rules:
+
+* every non-``index`` leaf keeps the stacked layout ``(n_layers, B, ...)``
+  produced by ``make_cache`` — batch (slot) axis is always axis 1;
+* ``index`` leaves, which ``make_cache`` emits as one scalar length per layer
+  ``(n_layers,)``, are widened to per-slot lengths ``(n_layers, B)``.  The
+  attention/MLA decode paths accept this vector form and scatter each row at
+  its own position.
+
+All device ops (insert, evict, reset-inactive) are jit'd once with donated
+pool buffers; the slot id is a traced scalar, so swapping requests between
+decode steps never recompiles.  The free-list and a host mirror of per-slot
+lengths live on the host — the scheduler reads those, never the device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+def _is_index(path) -> bool:
+    last = path[-1] if path else None
+    return isinstance(last, jax.tree_util.DictKey) and last.key == "index"
+
+
+def widen_index(cache: Any, n_slots: int) -> Any:
+    """(n_layers,) scalar-per-layer index leaves → (n_layers, n_slots) zeros."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: jnp.zeros(leaf.shape + (n_slots,), leaf.dtype)
+        if _is_index(p) else leaf,
+        cache,
+    )
+
+
+def expand_index(cache: Any) -> Any:
+    """Single-request cache: index leaves (n_layers,) → (n_layers, 1) so the
+    tree matches the pool layout (batch axis on every leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: leaf[..., None] if _is_index(p) else leaf, cache
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _insert(pool: Any, single: Any, slot: jnp.ndarray) -> Any:
+    """Copy a prefilled single-request cache (batch axis == 1, same max_len)
+    into slot `slot` along axis 1 of every leaf."""
+    return jax.tree.map(
+        lambda p, s: jax.lax.dynamic_update_slice_in_dim(
+            p, s.astype(p.dtype), slot, axis=1
+        ),
+        pool, single,
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _evict(pool: Any, slot: jnp.ndarray) -> Any:
+    """Zero the slot's length.  Stale K/V stay in memory but are masked out
+    (valid < 1) and fully overwritten by the next insert."""
+    def zero_col(path, leaf):
+        if not _is_index(path):
+            return leaf
+        col = jnp.zeros(leaf.shape[:-1] + (1,), leaf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, col, slot, axis=leaf.ndim - 1
+        )
+
+    return jax.tree_util.tree_map_with_path(zero_col, pool)
+
+
+def reset_inactive(cache: Any, active: jnp.ndarray) -> Any:
+    """Clamp index leaves of inactive slots back to 0 (active: (B,) bool).
+
+    Called inside the decode step so empty slots never walk their write
+    position past position 0 while idling.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: jnp.where(active[None, :], leaf, 0)
+        if _is_index(p) else leaf,
+        cache,
+    )
+
+
+class KVPool:
+    """Fixed-capacity slot pool over a model's cache pytree."""
+
+    def __init__(self, model: Model, n_slots: int, max_len: int):
+        if n_slots < 1 or max_len < 1:
+            raise ValueError(
+                f"pool needs n_slots >= 1 and max_len >= 1, got "
+                f"{n_slots=} {max_len=}"
+            )
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = widen_index(model.make_cache(n_slots, max_len), n_slots)
+        self.lengths = np.zeros(n_slots, np.int32)  # host mirror of index
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+
+    # ---- host-side slot bookkeeping ----
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        return self.lengths > 0
+
+    def acquire(self) -> Optional[int]:
+        """Pop a free slot id (lowest first), or None when full."""
+        return self._free.pop() if self._free else None
+
+    # ---- device ops ----
+    def insert(self, single_cache: Any, slot: int, length: int) -> None:
+        """Install a prefilled batch-1 cache (built at this pool's max_len)
+        into `slot`.  `length` is the prompt length already written."""
+        if length > self.max_len:
+            raise ValueError(f"prompt length {length} exceeds pool max_len "
+                             f"{self.max_len}")
+        self.cache = _insert(
+            self.cache, expand_index(single_cache), jnp.int32(slot)
+        )
+        self.lengths[slot] = length
+
+    def evict(self, slot: int) -> None:
+        """Free `slot` and zero its length on device."""
+        if self.lengths[slot] == 0 and slot in self._free:
+            return
+        self.cache = _evict(self.cache, jnp.int32(slot))
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    def reset(self) -> None:
+        """Evict everything (used between benchmark phases)."""
+        for slot in range(self.n_slots):
+            if self.lengths[slot] > 0:
+                self.evict(slot)

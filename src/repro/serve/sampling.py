@@ -1,0 +1,54 @@
+"""Vectorized per-request sampling over a batch of next-token logits.
+
+Every row of the batch carries its own sampling parameters (temperature,
+top-k), so a continuous-batching step — where each slot belongs to a
+different request — samples all slots in one fused op.  ``temperature <= 0``
+selects greedy argmax for that row regardless of the rng, which keeps greedy
+rows bit-deterministic inside a mixed batch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def top_k_mask(logits: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Mask logits outside each row's top-k to NEG_INF.
+
+    logits: (B, V); k: (B,) int32 — ``k <= 0`` disables the filter for that
+    row (equivalent to k = V).  jit-stable: per-row k is a threshold gather,
+    not a shape.
+    """
+    v = logits.shape[-1]
+    desc = jnp.sort(logits, axis=-1)[:, ::-1]  # (B, V) descending
+    kk = jnp.clip(jnp.where(k <= 0, v, k), 1, v).astype(jnp.int32)
+    thresh = jnp.take_along_axis(desc, (kk - 1)[:, None], axis=-1)  # (B, 1)
+    return jnp.where(logits >= thresh, logits, NEG_INF)
+
+
+def sample_tokens(
+    rng: jax.Array,
+    logits: jnp.ndarray,
+    temperature: jnp.ndarray,
+    top_k: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Per-row sampling: (B, V) logits → (B,) int32 tokens.
+
+    temperature: (B,) float — rows with ``t <= 0`` take argmax (greedy).
+    top_k:       (B,) int32 or None — per-row top-k filter (0 = off).
+    """
+    logits = logits.astype(jnp.float32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    if temperature.ndim == 0:
+        temperature = jnp.broadcast_to(temperature, logits.shape[:1])
+    greedy = jnp.argmax(logits, axis=-1)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    if top_k is not None:
+        scaled = top_k_mask(scaled, jnp.asarray(top_k, jnp.int32))
+    sampled = jax.random.categorical(rng, scaled, axis=-1)
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)

@@ -1,0 +1,132 @@
+"""Request admission for continuous batching: FCFS queue + arrival processes.
+
+The scheduler is pure host-side bookkeeping.  It owns the waiting line, the
+``ContinuousEngine`` owns the slots: between decode steps the engine asks
+``admit(now, free_slots)`` and the scheduler hands back at most
+``max_prefills_per_step`` arrived requests (prefill/decode interleaving — a
+prefill stalls every running slot for one step, so admission is throttled to
+bound the latency hit on in-flight decodes), dropping any whose admission
+deadline already passed.
+
+Arrival processes for benchmarking: ``poisson_arrivals`` (open-loop load at a
+given request rate) and ``trace_arrivals`` (replay explicit timestamps).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One generation request plus its lifecycle record."""
+
+    prompt: np.ndarray                   # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0                       # 0 = disabled
+    eos_token: Optional[int] = None
+    arrival_s: float = 0.0               # clock time the request arrives
+    deadline_s: Optional[float] = None   # max queue wait before drop (rel.)
+    rid: int = -1
+
+    # lifecycle (filled by the engine)
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    admitted_s: float = math.nan
+    first_token_s: float = math.nan
+    finish_s: float = math.nan
+    dropped: bool = False
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token, from arrival."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        """Total latency, from arrival to completion."""
+        return self.finish_s - self.arrival_s
+
+
+class FCFSScheduler:
+    """First-come-first-served admission with deadline drops."""
+
+    def __init__(self, max_prefills_per_step: int = 2):
+        if max_prefills_per_step < 1:
+            raise ValueError("max_prefills_per_step must be >= 1")
+        self.max_prefills_per_step = max_prefills_per_step
+        self._queue: List[ServeRequest] = []
+        self._next_rid = 0
+
+    def submit(self, req: ServeRequest) -> ServeRequest:
+        if req.rid < 0:
+            req.rid = self._next_rid
+            self._next_rid += 1
+        bisect.insort(self._queue, req, key=lambda r: (r.arrival_s, r.rid))
+        return req
+
+    def has_pending(self) -> bool:
+        return bool(self._queue)
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest arrival time among queued requests (None if empty)."""
+        return self._queue[0].arrival_s if self._queue else None
+
+    def admit(
+        self, now: float, free_slots: int
+    ) -> Tuple[List[ServeRequest], List[ServeRequest]]:
+        """Pop up to min(free_slots, max_prefills_per_step) arrived requests
+        in FCFS order.  Returns (admitted, dropped) — dropped requests sat in
+        the queue past their deadline and are marked, not scheduled."""
+        admitted: List[ServeRequest] = []
+        dropped: List[ServeRequest] = []
+        budget = min(free_slots, self.max_prefills_per_step)
+        while self._queue and self._queue[0].arrival_s <= now:
+            head = self._queue[0]
+            if (head.deadline_s is not None
+                    and now > head.arrival_s + head.deadline_s):
+                head.dropped = True
+                dropped.append(self._queue.pop(0))
+                continue
+            if budget <= 0:
+                break
+            head.admitted_s = now
+            admitted.append(self._queue.pop(0))
+            budget -= 1
+        return admitted, dropped
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(
+    n: int, rate: float, *, seed: int = 0, start: float = 0.0
+) -> np.ndarray:
+    """n arrival times from a Poisson process at `rate` req/s.
+
+    ``rate <= 0`` means all requests arrive at `start` (closed batch)."""
+    if rate <= 0:
+        return np.full(n, start)
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return start + np.cumsum(gaps) - gaps[0]  # first request arrives at start
+
+
+def trace_arrivals(times: Sequence[float]) -> np.ndarray:
+    """Replay explicit arrival timestamps (sorted)."""
+    return np.sort(np.asarray(times, np.float64))
+
+
+def assign_arrivals(
+    requests: Sequence[ServeRequest], times: np.ndarray
+) -> List[ServeRequest]:
+    if len(requests) != len(times):
+        raise ValueError("one arrival time per request")
+    for r, t in zip(requests, times):
+        r.arrival_s = float(t)
+    return list(requests)

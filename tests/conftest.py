@@ -9,6 +9,12 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running (production dry-run subprocess)"
+    )
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

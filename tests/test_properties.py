@@ -1,5 +1,9 @@
 """Hypothesis property-based tests on the system's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
+)
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax
