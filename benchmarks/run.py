@@ -7,20 +7,28 @@ Prints ``name,us_per_call,derived`` CSV rows (claims carry a ``holds=`` flag).
 from __future__ import annotations
 
 import argparse
+import importlib.util
+import pathlib
 import sys
 import time
+
+if importlib.util.find_spec("benchmarks") is None:
+    # run as a script (`python benchmarks/run.py`): put the repo root on the
+    # path so the `benchmarks.*` suite imports below resolve
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 SUITES = [
     ("table4", "benchmarks.table4_recipe_values", "Tables 4-5 recipe values (exact)"),
     ("roofline", "benchmarks.roofline_report", "§Roofline report from dry-run JSONL"),
     ("opt_step", "benchmarks.opt_step_bench", "fused vs unfused LAMB step"),
+    ("scaling", "benchmarks.scaling_bench", "accum × precision × fused-LAMB scaling"),
     ("table1", "benchmarks.table1_batch_scaling", "Table 1/4 batch scaling"),
     ("table2", "benchmarks.table2_lamb_vs_lars", "Table 2 LAMB vs LARS"),
     ("mixed_batch", "benchmarks.mixed_batch_bench", "§4.1 mixed-batch + re-warmup"),
     ("table3", "benchmarks.table3_optimizer_comparison", "Table 3 tuned baselines"),
 ]
 
-FAST = {"table4", "roofline", "opt_step"}
+FAST = {"table4", "roofline", "opt_step", "scaling"}
 
 
 def main() -> None:

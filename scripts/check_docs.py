@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Docs CI: validate internal links and run doctest-marked code fences.
+
+    PYTHONPATH=src python scripts/check_docs.py [files...]
+
+Defaults to README.md + docs/*.md.  Two checks:
+
+  * every relative markdown link ``[text](path#anchor)`` resolves to an
+    existing file (and, for .md targets, an existing ``#`` anchor);
+  * every fenced code block whose info string contains ``doctest``
+    (e.g. ```` ```python doctest ````) is executed with :mod:`doctest` —
+    the fences in docs/ are living examples, not decoration.
+
+Exit code 0 iff all links resolve and all doctests pass.
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\S[^\n]*)\n(.*?)^```\s*$", re.M | re.S)
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.M)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style anchor slug for a heading."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\s-]", "", slug)
+    return re.sub(r"\s+", "-", slug)
+
+
+def _anchors(md_path: Path) -> set:
+    return {_anchor(h) for h in HEADING_RE.findall(md_path.read_text())}
+
+
+def check_links(md_path: Path) -> list:
+    errors = []
+    for target in LINK_RE.findall(md_path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        resolved = (
+            (md_path.parent / path_part).resolve() if path_part else md_path
+        )
+        if not resolved.exists():
+            errors.append(f"{md_path}: broken link -> {target}")
+            continue
+        if anchor and resolved.suffix == ".md":
+            if _anchor(anchor) not in _anchors(resolved):
+                errors.append(f"{md_path}: missing anchor -> {target}")
+    return errors
+
+
+def check_doctests(md_path: Path) -> list:
+    errors = []
+    text = md_path.read_text()
+    for i, m in enumerate(FENCE_RE.finditer(text)):
+        info, body = m.group(1), m.group(2)
+        if "doctest" not in info.split():
+            continue
+        runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+        test = doctest.DocTestParser().get_doctest(
+            body, {}, f"{md_path.name}:fence{i}", str(md_path), 0
+        )
+        runner.run(test)
+        if runner.failures:
+            errors.append(
+                f"{md_path}: doctest fence #{i} failed "
+                f"({runner.failures}/{runner.tries} examples)"
+            )
+    return errors
+
+
+def main(argv: list) -> int:
+    files = (
+        [Path(a) for a in argv]
+        if argv
+        else [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    )
+    errors = []
+    n_fences = 0
+    for f in files:
+        errors += check_links(f)
+        n_fences += sum(
+            1
+            for m in FENCE_RE.finditer(f.read_text())
+            if "doctest" in m.group(1).split()
+        )
+        errors += check_doctests(f)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    print(
+        f"check_docs: {len(files)} files, {n_fences} doctest fences, "
+        f"{len(errors)} errors"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

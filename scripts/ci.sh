@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + a fast serving smoke.
+# CI entry point: tier-1 test suite + a fast serving smoke + docs checks.
 #
 #   scripts/ci.sh          # full tier-1 (includes the slow dry-run test)
 #   CI_FAST=1 scripts/ci.sh  # skip the slow production dry-run subprocess
@@ -17,5 +17,10 @@ fi
 
 # continuous-batching serving smoke: tiny workload, must stream and drain
 python examples/serve_continuous.py --requests 4 --slots 2 --arrival-rate 50
+
+# docs: internal links + doctest-marked code fences in README.md and docs/
+# (also run standalone by the ci.yml `docs` job for fast-fail signal; here it
+# keeps this script the complete local gate)
+python scripts/check_docs.py
 
 echo "ci.sh: OK"

@@ -127,6 +127,29 @@ class TrainConfig:
     grad_clip_norm: Optional[float] = 1.0
     bias_correction: bool = True
     moment_dtype: Optional[str] = None  # e.g. "bfloat16" — halves m/v state
-    microbatch: Optional[int] = None  # grad-accumulation slices
+    # --- large-batch scaling knobs (global_batch = microbatch × accum × DP) ---
+    accum_steps: int = 1           # gradient-accumulation microbatches per step
+    microbatch: Optional[int] = None  # legacy alias for accum_steps (slices)
+    precision: str = "fp32"        # fp32 | bf16 (bf16 compute, fp32 masters)
+    use_fused_lamb: bool = False   # Pallas/XLA fused LAMB update in the step
+    fused_backend: str = "auto"    # auto | pallas | xla | interpret
     seed: int = 0
     log_trust_ratios: bool = False
+
+    @property
+    def grad_accum_steps(self) -> int:
+        """Effective number of accumulation microbatches (≥ 1).
+
+        ``accum_steps`` is canonical; the legacy ``microbatch`` slice count is
+        honored when it asks for more slices.
+        """
+        return max(self.accum_steps, self.microbatch or 1, 1)
+
+    @property
+    def compute_dtype(self) -> Optional[str]:
+        """Forward/backward compute dtype implied by ``precision`` (None = native)."""
+        if self.precision in ("bf16", "bfloat16"):
+            return "bfloat16"
+        if self.precision in ("fp32", "float32"):
+            return None
+        raise ValueError(f"unknown precision {self.precision!r}")

@@ -21,6 +21,11 @@ TensorFlow implementation the paper links):
 leaves (leading ``layers`` axis, consumed by ``lax.scan``).  ``layer_axes``
 gives the stacked-axis index per leaf; norms are then computed *per layer
 slice*, reproducing exactly the per-layer trust ratios of an unstacked model.
+
+**Mixed-precision safety**: every norm here upcasts to fp32 before the
+reduction (``_slice_norm``), so bf16 params/updates keep full dynamic range
+in the trust ratio — a ratio of two fp32 norms — even when the forward ran
+in half precision.
 """
 from __future__ import annotations
 
@@ -71,7 +76,15 @@ def trust_ratio(
     eps: float = 0.0,
     norm_ord: str = "l2",
 ) -> jnp.ndarray:
-    """phi(||x||)/||u|| with the reference-impl degenerate-norm fallbacks."""
+    """phi(||x||)/||u|| with the reference-impl degenerate-norm fallbacks.
+
+    Args: ``param``/``update`` = x_t and u_t of Algorithm 2; ``layer_axis``
+    keeps that axis for per-slice ratios on scanned stacks; ``phi_bounds``
+    clips the weight norm; ``norm_ord`` picks the App. F norm.  Returns a
+    scalar (unstacked) or a broadcastable per-layer array.  Invariant: the
+    ratio is 1 wherever either norm is zero, and always a ratio of fp32
+    reductions regardless of input dtype.
+    """
     w_norm = phi_clip(_slice_norm(param, layer_axis, norm_ord), phi_bounds)
     u_norm = _slice_norm(update, layer_axis, norm_ord)
     safe = w_norm / (u_norm + eps)
@@ -87,7 +100,15 @@ def layerwise_adaptation(
     eps: float = 0.0,
     norm_ord: str = "l2",   # l2 | l1 | linf  (App. F ablation)
 ) -> GradientTransformation:
-    """GradientTransformation applying the layerwise trust-ratio rescale."""
+    """GradientTransformation applying the layerwise trust-ratio rescale.
+
+    Args: ``phi_bounds`` = (gamma_l, gamma_u) clip for phi; ``trust_mask``
+    excludes leaves (False = update passes through untouched); ``layer_axes``
+    marks stacked-layer axes (-1/None = unstacked).  Returns a stateless
+    transform.  Invariant: after this transform a masked-in leaf's update
+    norm is ``phi(||x||)`` per layer slice — multiply by -lr downstream to
+    get Algorithm 2's ``eta * phi / ||u||`` step.
+    """
 
     def init(params):
         return EmptyState()

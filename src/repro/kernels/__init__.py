@@ -1,5 +1,23 @@
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lamb_update import lamb_update
-from repro.kernels.ops import flash_sdpa, fused_lamb
+from repro.kernels.ops import (
+    FusedLambState,
+    flash_sdpa,
+    fused_lamb,
+    fused_lamb_apply,
+    fused_lamb_init,
+    make_fused_lamb_step,
+    resolve_fused_backend,
+)
 
-__all__ = ["flash_attention", "flash_sdpa", "fused_lamb", "lamb_update"]
+__all__ = [
+    "FusedLambState",
+    "flash_attention",
+    "flash_sdpa",
+    "fused_lamb",
+    "fused_lamb_apply",
+    "fused_lamb_init",
+    "lamb_update",
+    "make_fused_lamb_step",
+    "resolve_fused_backend",
+]

@@ -2,8 +2,17 @@
 
 ``fused_lamb`` is a drop-in GradientTransformation equivalent to
 ``repro.core.lamb`` (tested for exact agreement) but whose per-leaf update is
-the fused two-pass Pallas kernel — the beyond-paper bandwidth optimization
-for the optimizer step (§Perf).
+a *fused* LAMB step — the beyond-paper bandwidth optimization for the
+optimizer step (§Perf).  Two backends share one semantics:
+
+  * ``pallas``    — the two-pass Pallas TPU kernel (≈10 N HBM traffic vs
+                    ≈21 N for the unfused transform chain);
+  * ``xla``       — a single fused jnp expression per leaf
+                    (``kernels.ref.lamb_update_ref``) that XLA fuses into few
+                    passes — the portable fallback for CPU/GPU where Pallas
+                    would run in (slow) interpret mode;
+  * ``interpret`` — the Pallas kernel in interpret mode (tests only);
+  * ``auto``      — ``pallas`` on TPU, ``xla`` elsewhere.
 
 ``flash_sdpa`` adapts the flash-attention kernel to the model layout
 (B, S, H, D) with GQA head expansion, for TPU prefill/train paths.
@@ -17,13 +26,164 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lamb_update import lamb_update
-from repro.optim.base import GradientTransformation, ScalarOrSchedule
+from repro.kernels.ref import lamb_update_ref
+from repro.optim.base import (
+    GradientTransformation,
+    ScalarOrSchedule,
+    clip_tree_by_global_norm,
+)
 
 
 class FusedLambState(NamedTuple):
+    """Fused-LAMB optimizer state.
+
+    ``count`` ages the moments (bias correction) and must carry across
+    mixed-batch stage switches; ``sched_count`` drives LR schedules and is
+    what stage-2 re-warm-up resets (mirrors the split between
+    ScaleByAdamState.count and ScheduleState.count in the unfused chain).
+    """
+
     count: jnp.ndarray
+    sched_count: jnp.ndarray
     mu: Any
     nu: Any
+
+
+def fused_lamb_init(params) -> FusedLambState:
+    """Zero moments (always fp32 — mixed-precision masters) + zero counters."""
+    zeros = lambda: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return FusedLambState(
+        jnp.zeros([], jnp.int32), jnp.zeros([], jnp.int32), zeros(), zeros()
+    )
+
+
+def fused_lamb_apply(
+    params: Any,
+    grads: Any,
+    mu: Any,
+    nu: Any,
+    count: jnp.ndarray,
+    lr_t: jnp.ndarray,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    wd_mask: Optional[Any] = None,
+    trust_mask: Optional[Any] = None,
+    layer_axes: Optional[Any] = None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    mode: str = "xla",
+) -> Tuple[Any, Any, Any]:
+    """One fused LAMB step over a whole pytree: (params', mu', nu').
+
+    ``count`` is the 1-based step for bias correction and ``lr_t`` the traced
+    learning rate; ``mode`` is a *resolved* backend ("pallas" | "xla" |
+    "interpret").  This is the direct-apply core the jit'd train step calls —
+    no parameter-delta round-trip — and also what the ``fused_lamb``
+    GradientTransformation wraps for drop-in composition with the optim API.
+    Invariant: identical math to ``core.lamb`` per layer (parity-tested).
+    """
+    la = layer_axes
+    if la is None:
+        la = jax.tree.map(lambda _: -1, grads)
+    else:
+        la = jax.tree.map(
+            lambda a: -1 if a is None else a, la,
+            is_leaf=lambda x: x is None or isinstance(x, int),
+        )
+    wm = wd_mask if wd_mask is not None else jax.tree.map(lambda _: True, grads)
+    tm = trust_mask if trust_mask is not None else jax.tree.map(lambda _: True, grads)
+
+    treedef = jax.tree_util.tree_structure(grads)
+    p_l, g_l = jax.tree.leaves(params), jax.tree.leaves(grads)
+    m_l, v_l = jax.tree.leaves(mu), jax.tree.leaves(nu)
+    la_l, wm_l, tm_l = jax.tree.leaves(la), jax.tree.leaves(wm), jax.tree.leaves(tm)
+
+    xs, ms, vs = [], [], []
+    for p, g, m, v, axis, wd_on, tr_on in zip(p_l, g_l, m_l, v_l, la_l, wm_l, tm_l):
+        axis = 0 if axis == 0 else None
+        if mode == "xla":
+            x2, m2, v2 = lamb_update_ref(
+                p, g, m, v, lr=lr_t, b1=b1, b2=b2, eps=eps,
+                weight_decay=weight_decay if wd_on else 0.0,
+                step=count, phi_bounds=phi_bounds,
+                layer_axis=axis, apply_trust=bool(tr_on),
+            )
+        else:
+            x2, m2, v2 = lamb_update(
+                p, g, m, v, count, lr_t,
+                lr=1.0, b1=b1, b2=b2, eps=eps,
+                weight_decay=weight_decay if wd_on else 0.0,
+                phi_lo=None if phi_bounds is None else phi_bounds[0],
+                phi_hi=None if phi_bounds is None else phi_bounds[1],
+                layer_axis=axis, apply_trust=bool(tr_on),
+                interpret=mode == "interpret",
+            )
+        xs.append(x2)
+        ms.append(m2)
+        vs.append(v2)
+
+    unflat = jax.tree_util.tree_unflatten
+    return unflat(treedef, xs), unflat(treedef, ms), unflat(treedef, vs)
+
+
+def resolve_fused_backend(backend: str = "auto") -> str:
+    """Map ``auto`` to the fastest correct backend for the current platform.
+
+    Invariant: the returned backend is runnable here — ``pallas`` only comes
+    back when the default JAX backend is a TPU.
+    """
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("pallas", "xla", "interpret"):
+        raise ValueError(f"unknown fused backend {backend!r}")
+    return backend
+
+
+def make_fused_lamb_step(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    *,
+    wd_mask: Optional[Any] = None,
+    trust_mask: Optional[Any] = None,
+    layer_axes: Optional[Any] = None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    grad_clip_norm: Optional[float] = None,
+    mode: str = "xla",
+):
+    """The single stateful fused-LAMB core shared by the transform wrapper
+    and the jit'd train step's direct path.
+
+    Returns ``step(params, grads, state) -> (new_params, new_state)``:
+    clip → count/sched_count advance → lr(sched_count) → fused apply, in
+    that order.  Invariant: keeping this sequence in one place is what
+    guarantees fused-direct vs transform parity.
+    """
+
+    def step(params, grads, state: FusedLambState):
+        if grad_clip_norm is not None:
+            grads = clip_tree_by_global_norm(grads, grad_clip_norm)
+        count = state.count + 1
+        lr_t = (
+            learning_rate(state.sched_count)
+            if callable(learning_rate)
+            else jnp.asarray(learning_rate)
+        )
+        new_params, new_mu, new_nu = fused_lamb_apply(
+            params, grads, state.mu, state.nu, count, lr_t,
+            b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+            wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
+            phi_bounds=phi_bounds, mode=mode,
+        )
+        return new_params, FusedLambState(
+            count, state.sched_count + 1, new_mu, new_nu
+        )
+
+    return step
 
 
 def fused_lamb(
@@ -37,72 +197,34 @@ def fused_lamb(
     trust_mask: Optional[Any] = None,
     layer_axes: Optional[Any] = None,
     phi_bounds: Optional[Tuple[float, float]] = None,
+    grad_clip_norm: Optional[float] = None,
+    backend: str = "auto",
     interpret: bool = False,
 ) -> GradientTransformation:
-    """LAMB with the fused Pallas update kernel (per parameter leaf)."""
+    """LAMB with a fused per-leaf update (Pallas kernel or XLA fallback).
 
-    def init(params):
-        zeros = lambda: jax.tree.map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), params
-        )
-        return FusedLambState(jnp.zeros([], jnp.int32), zeros(), zeros())
+    Args mirror :func:`repro.core.lamb` (masks/axes are the model's pytree
+    metadata); ``backend`` picks the fused implementation (see module doc),
+    and ``interpret=True`` is a legacy alias for ``backend="interpret"``.
+
+    Returns a ``GradientTransformation`` whose ``update`` yields parameter
+    *deltas*, so it composes with ``optim.apply_updates`` and ``optim.chain``
+    exactly like the unfused chain.  (The jit'd train step bypasses the delta
+    round-trip via :func:`make_fused_lamb_step`.)  Invariant: per-layer trust
+    ratios match ``core.lamb`` on stacked and unstacked leaves to float
+    tolerance (see tests/test_kernels.py).
+    """
+    mode = "interpret" if interpret else resolve_fused_backend(backend)
+    step = make_fused_lamb_step(
+        learning_rate, b1, b2, eps, weight_decay,
+        wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
+        phi_bounds=phi_bounds, grad_clip_norm=grad_clip_norm, mode=mode,
+    )
 
     def update(grads, state, params=None):
         if params is None:
             raise ValueError("fused_lamb requires params")
-        count = state.count + 1
-        lr_t = (
-            learning_rate(state.count)
-            if callable(learning_rate)
-            else jnp.asarray(learning_rate)
-        )
-
-        la = layer_axes
-        if la is None:
-            la = jax.tree.map(lambda _: -1, grads)
-        else:
-            la = jax.tree.map(
-                lambda a: -1 if a is None else a, la,
-                is_leaf=lambda x: x is None or isinstance(x, int),
-            )
-        wm = wd_mask if wd_mask is not None else jax.tree.map(lambda _: True, grads)
-        tm = (
-            trust_mask
-            if trust_mask is not None
-            else jax.tree.map(lambda _: True, grads)
-        )
-
-        new_params, new_mu, new_nu = {}, {}, {}
-        flat = jax.tree_util.tree_flatten_with_path(grads)[0]
-        treedef = jax.tree_util.tree_structure(grads)
-        p_l, g_l = jax.tree.leaves(params), jax.tree.leaves(grads)
-        m_l, v_l = jax.tree.leaves(state.mu), jax.tree.leaves(state.nu)
-        la_l, wm_l, tm_l = jax.tree.leaves(la), jax.tree.leaves(wm), jax.tree.leaves(tm)
-
-        xs, ms, vs = [], [], []
-        for p, g, m, v, axis, wd_on, tr_on in zip(
-            p_l, g_l, m_l, v_l, la_l, wm_l, tm_l
-        ):
-            axis = 0 if axis == 0 else None
-            x2, m2, v2 = lamb_update(
-                p, g, m, v, count, lr_t,
-                lr=1.0, b1=b1, b2=b2, eps=eps,
-                weight_decay=weight_decay if wd_on else 0.0,
-                phi_lo=None if phi_bounds is None else phi_bounds[0],
-                phi_hi=None if phi_bounds is None else phi_bounds[1],
-                layer_axis=axis, apply_trust=bool(tr_on),
-                interpret=interpret,
-            )
-            xs.append(x2)
-            ms.append(m2)
-            vs.append(v2)
-
-        new_params = jax.tree_util.tree_unflatten(treedef, xs)
-        new_state = FusedLambState(
-            count,
-            jax.tree_util.tree_unflatten(treedef, ms),
-            jax.tree_util.tree_unflatten(treedef, vs),
-        )
+        new_params, new_state = step(params, grads, state)
         # Return *updates* (delta) so apply_updates composes like other opts.
         updates = jax.tree.map(
             lambda new, old: (new.astype(jnp.float32) - old.astype(jnp.float32)).astype(old.dtype),
@@ -110,7 +232,7 @@ def fused_lamb(
         )
         return updates, new_state
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(fused_lamb_init, update)
 
 
 def flash_sdpa(

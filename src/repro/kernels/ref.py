@@ -26,12 +26,16 @@ def lamb_update_ref(
     """One LAMB step on a single tensor.  Returns (x', m', v').
 
     layer_axis: stacked-layers axis → per-slice trust ratios (scan-aware).
+    ``lr`` and ``step`` may be traced scalars (schedules inside jit) — this
+    is the XLA fallback backend of ``kernels.ops.fused_lamb``, not just a
+    test oracle.
     """
     x32, g32 = x.astype(jnp.float32), g.astype(jnp.float32)
     m_new = b1 * m + (1 - b1) * g32
     v_new = b2 * v + (1 - b2) * g32 * g32
-    c1 = 1.0 / (1.0 - b1**step)
-    c2 = 1.0 / (1.0 - b2**step)
+    t = jnp.asarray(step, jnp.float32)
+    c1 = 1.0 / (1.0 - b1**t)
+    c2 = 1.0 / (1.0 - b2**t)
     r = (m_new * c1) / (jnp.sqrt(v_new * c2) + eps)
     u = r + weight_decay * x32
 

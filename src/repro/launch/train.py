@@ -2,7 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
         --steps 100 --batch 16 --seq 128 --optimizer lamb [--smoke] \
-        [--mixed-batch] [--checkpoint-dir ckpt/] [--model-parallel 2]
+        [--mixed-batch] [--checkpoint-dir ckpt/] [--model-parallel 2] \
+        [--accum-steps 4] [--precision bf16] [--fused-lamb]
+
+``--batch`` is the *global* batch; ``--accum-steps k`` runs it as k
+sequential microbatches of ``batch/k`` (activation memory scales with the
+microbatch, optimizer semantics with the global batch — the paper's
+batch-to-the-hardware-limit recipe on fixed memory).  ``--precision bf16``
+computes forward/backward in bf16 against fp32 master params, and
+``--fused-lamb`` routes the optimizer through the fused update kernel
+(Pallas on TPU, fused XLA elsewhere).
 
 ``--smoke`` swaps in the reduced config of the same family (CPU-runnable);
 the full configs are exercised via the dry-run (repro.launch.dryrun).
@@ -38,6 +47,14 @@ def main() -> None:
     ap.add_argument("--weight-decay", type=float, default=0.01)
     ap.add_argument("--mixed-batch", action="store_true",
                     help="two-stage §4.1 recipe (seq -> 4*seq, batch -> batch/4)")
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
+    ap.add_argument("--precision", default="fp32", choices=["fp32", "bf16"],
+                    help="compute dtype (bf16 keeps fp32 master params)")
+    ap.add_argument("--fused-lamb", action="store_true",
+                    help="fused LAMB update (Pallas on TPU, XLA fallback)")
+    ap.add_argument("--log-trust-ratios", action="store_true",
+                    help="per-step trust-ratio min/mean/max in history")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -45,10 +62,16 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.accum_steps < 1:
+        raise SystemExit(f"--accum-steps must be >= 1, got {args.accum_steps}")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M "
           f"active={model.active_param_count()/1e6:.1f}M")
+    print(f"global_batch={args.batch} "
+          f"microbatch={args.batch // args.accum_steps} "
+          f"accum={args.accum_steps} precision={args.precision} "
+          f"fused_lamb={args.fused_lamb}")
 
     shard_ctx = None
     if args.model_parallel > 1 or len(jax.devices()) > 1:
@@ -58,9 +81,17 @@ def main() -> None:
     warmup_ratio = core.linear_epoch_warmup_ratio(
         args.warmup_ratio, args.base_batch, args.batch
     )
+    if args.batch % args.accum_steps:
+        raise SystemExit(
+            f"--batch {args.batch} must be divisible by --accum-steps "
+            f"{args.accum_steps}"
+        )
     tc = TrainConfig(
         optimizer=args.optimizer, learning_rate=lr,
         weight_decay=args.weight_decay, total_steps=args.steps, seed=args.seed,
+        accum_steps=args.accum_steps, precision=args.precision,
+        use_fused_lamb=args.fused_lamb,
+        log_trust_ratios=args.log_trust_ratios,
     )
     trainer = Trainer(
         model, tc,
@@ -83,6 +114,14 @@ def main() -> None:
                        base_lr=args.base_lr, base_batch=args.base_batch,
                        base_warmup_ratio=args.warmup_ratio),
         ]
+        # every stage batch must slice into accum_steps microbatches, else
+        # stage 2 would crash at trace time after stage 1 already trained
+        for st in stages:
+            if st.batch_size % args.accum_steps:
+                raise SystemExit(
+                    f"stage {st.name!r} batch {st.batch_size} is not "
+                    f"divisible by --accum-steps {args.accum_steps}"
+                )
         trainer.fit_stages(stages, data_seed=args.seed)
     else:
         data = DataPipeline(cfg, args.batch, args.seq, seed=args.seed)

@@ -57,7 +57,16 @@ class Model:
         return nn.layer_axis_tree(self.defs)
 
     # ---- compute ----
-    def apply(self, params, batch, **kw):
+    def apply(self, params, batch, *, compute_dtype=None, **kw):
+        """Training/encoder forward: (logits, aux).
+
+        ``compute_dtype`` (e.g. ``"bfloat16"``) casts floating params before
+        the forward so matmuls/activations run in low precision while the
+        caller keeps fp32 masters; gradients taken through this cast come
+        back in the master dtype (the mixed-precision policy's forward half).
+        """
+        if compute_dtype is not None:
+            params = nn.cast_tree(params, jnp.dtype(compute_dtype))
         logits, _, aux = self.forward_fn(params, batch, self.cfg, **kw)
         return logits, aux
 

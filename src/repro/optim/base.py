@@ -8,6 +8,12 @@ an optimizer, so the transformation algebra is built here from scratch:
 
 All transforms are pure pytree functions, compose with ``chain`` and are
 pjit-friendly (norm reductions over sharded leaves lower to SPMD all-reduces).
+
+Mixed-precision contract: transforms accept updates of any floating dtype but
+do *all* stateful arithmetic and every norm reduction in fp32 — optimizer
+moments are fp32 unless a ``moment_dtype`` narrows the stored copy, and
+reductions upcast before summing so bf16 gradients cannot overflow or lose
+dynamic range inside the optimizer.
 """
 from __future__ import annotations
 
@@ -49,6 +55,7 @@ class ScheduleState(NamedTuple):
 
 
 def identity() -> GradientTransformation:
+    """The no-op transform: updates pass through unchanged (chain unit)."""
     return GradientTransformation(
         init=lambda params: EmptyState(),
         update=lambda u, s, p=None: (u, s),
@@ -56,6 +63,14 @@ def identity() -> GradientTransformation:
 
 
 def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transforms left-to-right into one.
+
+    Args: any number of ``GradientTransformation``s.  Returns one whose state
+    is the tuple of member states and whose ``update`` threads the updates
+    through each member in order.  Invariant: ``params`` is passed to every
+    member unchanged (members see the *pre-step* parameters).
+    """
+
     def init(params):
         return tuple(t.init(params) for t in transforms)
 
@@ -70,6 +85,7 @@ def chain(*transforms: GradientTransformation) -> GradientTransformation:
 
 
 def scale(factor: float) -> GradientTransformation:
+    """Stateless transform multiplying every update leaf by ``factor``."""
     return GradientTransformation(
         init=lambda params: EmptyState(),
         update=lambda u, s, p=None: (jax.tree.map(lambda x: factor * x, u), s),
@@ -83,7 +99,14 @@ def _lr_value(lr: ScalarOrSchedule, count) -> jnp.ndarray:
 def scale_by_learning_rate(
     learning_rate: ScalarOrSchedule, *, flip_sign: bool = True
 ) -> GradientTransformation:
-    """Multiply updates by -lr (lr may be a schedule of the step count)."""
+    """Multiply updates by -lr (lr may be a schedule of the step count).
+
+    Args: ``learning_rate`` as a float or a ``count -> lr`` schedule;
+    ``flip_sign=False`` keeps +lr (for optimizers that already negate).
+    Returns a transform holding the schedule counter (``ScheduleState``).
+    Invariant: the counter starts at 0 — the first step sees ``lr(0)`` — and
+    is exactly what stage-2 re-warm-up resets (see train/trainer.py).
+    """
 
     def init(params):
         return ScheduleState(count=jnp.zeros([], jnp.int32))
@@ -98,7 +121,13 @@ def scale_by_learning_rate(
 
 
 def trace(decay: float, *, average: bool = True) -> GradientTransformation:
-    """Heavy-ball momentum: m = decay*m + (1-decay)*g (paper's LARS form)."""
+    """Heavy-ball momentum: m = decay*m + (1-decay)*g (paper's LARS form).
+
+    Args: ``decay`` = β1; ``average=False`` drops the (1-decay) factor
+    (classical momentum).  Returns a transform whose updates are the new
+    momentum.  Invariant: the momentum buffer is fp32 regardless of gradient
+    dtype.
+    """
     mix = (1.0 - decay) if average else 1.0
 
     def init(params):
@@ -133,6 +162,10 @@ def scale_by_adam(
     removed; its effect is equivalent to LR warmup).  ``nesterov_m`` gives the
     N-LAMB first-moment rule (Alg. 3) and ``nesterov_v`` additionally the
     NN-LAMB second-moment rule (Alg. 4), both with constant betas.
+
+    ``moment_dtype`` narrows the *stored* m/v (e.g. bf16 halves optimizer
+    state); the EMA arithmetic still runs in fp32 each step.  Invariant:
+    returned updates are always fp32, whatever the gradient dtype.
     """
 
     mdt = jnp.dtype(moment_dtype) if moment_dtype is not None else jnp.float32
@@ -191,6 +224,8 @@ def scale_by_adam(
 
 
 def scale_by_adagrad(eps: float = 1e-7) -> GradientTransformation:
+    """Adagrad rescaling: u = g/(sqrt(Σ g²)+eps), fp32 accumulator."""
+
     def init(params):
         return ScaleByAdagradState(
             accum=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
@@ -210,7 +245,12 @@ def scale_by_adagrad(eps: float = 1e-7) -> GradientTransformation:
 def add_decayed_weights(
     weight_decay: float, mask: Optional[PyTree] = None
 ) -> GradientTransformation:
-    """u += wd * params (decoupled weight decay, applied where mask is True)."""
+    """u += wd * params (decoupled weight decay, applied where mask is True).
+
+    Args: ``weight_decay`` = λ of Algorithm 2; ``mask`` is a bool pytree
+    aligned with params (None = decay everything).  Invariant: requires
+    ``params`` at update time — raises ValueError otherwise.
+    """
 
     def init(params):
         return EmptyState()
@@ -234,21 +274,37 @@ def add_decayed_weights(
     return GradientTransformation(init, update)
 
 
+def clip_tree_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    """Rescale a pytree so its global L2 norm is at most ``max_norm``.
+
+    The norm reduction always runs in fp32 (dynamic-range safe for bf16
+    leaves); leaf dtypes are preserved.  Shared by the ``clip_by_global_norm``
+    transform and the fused-LAMB train-step path so both clip identically.
+    """
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    gnorm = jnp.sqrt(jnp.sum(jnp.stack(sq)))
+    factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda x: (x * factor).astype(x.dtype), tree)
+
+
 def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    """Stateless transform: scale updates to global L2 norm ≤ ``max_norm``."""
+
     def init(params):
         return EmptyState()
 
     def update(updates, state, params=None):
-        sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(updates)]
-        gnorm = jnp.sqrt(jnp.sum(jnp.stack(sq)))
-        factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
-        return jax.tree.map(lambda x: (x * factor).astype(x.dtype), updates), state
+        return clip_tree_by_global_norm(updates, max_norm), state
 
     return GradientTransformation(init, update)
 
 
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
-    """x_{t+1} = x_t + u_t, preserving param dtypes."""
+    """x_{t+1} = x_t + u_t, preserving param dtypes.
+
+    Invariant: the add happens in fp32 even for low-precision params, so
+    small updates are not lost to rounding before the downcast.
+    """
     return jax.tree.map(
         lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
         params,

@@ -89,7 +89,14 @@ def make_pool_decode_step(model: Model, *, greedy: bool = False):
 
 
 class ContinuousEngine:
-    """Slot-pool generation engine with mid-decode admission."""
+    """Slot-pool generation engine with mid-decode admission.
+
+    Args: ``n_slots`` bounds the concurrent decode batch; ``max_len`` the
+    per-slot cache; ``scheduler`` defaults to FCFS.  Use ``submit`` +
+    ``generate`` (or just ``generate(requests)``).  Invariant: the decode
+    step shape is pinned to (n_slots, 1) for the engine's lifetime — slot
+    churn, admissions and finishes never trigger recompilation.
+    """
 
     def __init__(
         self,
@@ -216,6 +223,13 @@ class ContinuousEngine:
 
     # ---- public API ------------------------------------------------------
     def submit(self, req: ServeRequest) -> ServeRequest:
+        """Validate and enqueue a request (returns it for chaining).
+
+        Invariant: admission is deferred to ``generate``'s loop — a
+        submitted request holds no slot until the scheduler admits it.
+        Raises ValueError if the prompt is empty or the prompt+budget
+        cannot fit the pool's ``max_len``.
+        """
         if len(req.prompt) < 1:
             raise ValueError("prompt must hold at least one token")
         if req.max_new_tokens < 1:
@@ -236,8 +250,15 @@ class ContinuousEngine:
         *,
         on_token: Optional[TokenCallback] = None,
     ) -> List[ServeRequest]:
-        """Run until the queue and all slots drain.  Returns the requests
-        (completed in place; check ``.dropped`` for deadline casualties)."""
+        """Run until the queue and all slots drain.
+
+        Args: ``requests`` to submit up front (may be None if ``submit`` was
+        called directly); ``on_token(req, tok)`` streams every sampled token.
+        Returns the submitted requests, completed in place (check
+        ``.dropped`` for deadline casualties).  Invariant: wall-clock
+        latencies stay consistent even when the virtual clock fast-forwards
+        across idle gaps between arrivals.
+        """
         submitted = [self.submit(r) for r in requests] if requests else []
         t0 = time.perf_counter()
         offset = 0.0  # virtual fast-forward while idle
@@ -262,7 +283,12 @@ class ContinuousEngine:
 
 
 def serving_stats(requests: Sequence[ServeRequest]) -> Dict[str, float]:
-    """Aggregate throughput/latency over a completed request set."""
+    """Aggregate throughput/latency over a completed request set.
+
+    Returns request/token counts, tokens/s over the busy window, and
+    p50/p99 latency + TTFT.  Invariant: dropped requests are counted but
+    excluded from every latency percentile.
+    """
     done = [r for r in requests if not r.dropped and r.out_tokens]
     if not done:
         return {"requests": 0, "dropped": sum(r.dropped for r in requests)}

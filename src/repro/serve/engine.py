@@ -22,6 +22,12 @@ from repro.sharding.context import ShardCtx, use_sharding
 
 
 def make_prefill_step(model: Model):
+    """prefill_step(params, batch, cache) -> (last_logits(B,V), cache).
+
+    Invariant: the returned cache holds every prompt position, so the first
+    decode step can start at position ``prompt_len``.
+    """
+
     def prefill_step(params, batch, cache):
         logits, cache = model.prefill(params, batch, cache)
         last = logits[:, -1]
@@ -31,7 +37,11 @@ def make_prefill_step(model: Model):
 
 
 def make_decode_step(model: Model):
-    """One-token step: (params, cache, tokens(B,1), positions(B,1)) → logits."""
+    """One-token step: (params, cache, tokens(B,1), positions(B,1)) → logits.
+
+    Returns (logits(B,V), cache).  Invariant: fixed shapes — one jit
+    compilation serves the whole decode loop (and the dry-run lowers it).
+    """
 
     def decode_step(params, cache, tokens, positions):
         logits, cache = model.decode(params, {"tokens": tokens}, cache, positions)
@@ -42,6 +52,9 @@ def make_decode_step(model: Model):
 
 @dataclasses.dataclass
 class Request:
+    """One static-batch generation request (temperature 0 = greedy);
+    ``out_tokens``/``latency_s`` are filled in by ``generate_batch``."""
+
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
@@ -75,7 +88,15 @@ class Engine:
         return sample_tokens(sub, logits, temperatures)
 
     def generate_batch(self, requests: List[Request]) -> List[Request]:
-        """Pad prompts to a common length, prefill once, decode greedily."""
+        """Pad prompts to a common length, prefill once, decode to the
+        slowest request's budget.
+
+        Args: a list of :class:`Request`.  Returns the same list with
+        ``out_tokens`` (each trimmed to its own ``max_new_tokens``) and a
+        shared ``latency_s`` filled in.  Invariant: the whole batch decodes
+        in lock-step — a short request waits on the longest one (the
+        limitation ContinuousEngine removes).
+        """
         t0 = time.perf_counter()
         b = len(requests)
         s = max(len(r.prompt) for r in requests)
@@ -111,6 +132,8 @@ class Engine:
         return requests
 
     def throughput_stats(self, requests: List[Request]) -> Dict[str, float]:
+        """Aggregate a completed batch: request/token counts, wall time,
+        tokens/s (batch-level, since latency is shared)."""
         n_new = sum(r.max_new_tokens for r in requests)
         dt = max(r.latency_s for r in requests)
         return {

@@ -91,7 +91,14 @@ def reset_inactive(cache: Any, active: jnp.ndarray) -> Any:
 
 
 class KVPool:
-    """Fixed-capacity slot pool over a model's cache pytree."""
+    """Fixed-capacity slot pool over a model's cache pytree.
+
+    Args: the model (for ``make_cache``), ``n_slots`` concurrent requests,
+    ``max_len`` cache positions per slot.  Invariant: ``lengths[s] > 0``
+    iff slot ``s`` is occupied, and the host free-list / lengths mirror is
+    the single source of truth the scheduler reads — no device sync needed
+    for admission decisions.
+    """
 
     def __init__(self, model: Model, n_slots: int, max_len: int):
         if n_slots < 1 or max_len < 1:
@@ -109,10 +116,12 @@ class KVPool:
     # ---- host-side slot bookkeeping ----
     @property
     def n_free(self) -> int:
+        """Free slots right now (host-side, O(1))."""
         return len(self._free)
 
     @property
     def active_mask(self) -> np.ndarray:
+        """(n_slots,) bool host array: True where a request occupies a slot."""
         return self.lengths > 0
 
     def acquire(self) -> Optional[int]:

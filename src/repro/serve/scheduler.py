@@ -63,6 +63,11 @@ class FCFSScheduler:
         self._next_rid = 0
 
     def submit(self, req: ServeRequest) -> ServeRequest:
+        """Enqueue a request (assigning a rid if unset) and return it.
+
+        Invariant: the queue stays sorted by (arrival_s, rid) — FCFS even
+        when requests are submitted out of arrival order.
+        """
         if req.rid < 0:
             req.rid = self._next_rid
             self._next_rid += 1
@@ -70,6 +75,7 @@ class FCFSScheduler:
         return req
 
     def has_pending(self) -> bool:
+        """True while any request is still waiting (arrived or future)."""
         return bool(self._queue)
 
     def next_arrival(self) -> Optional[float]:
@@ -125,6 +131,8 @@ def trace_arrivals(times: Sequence[float]) -> np.ndarray:
 def assign_arrivals(
     requests: Sequence[ServeRequest], times: np.ndarray
 ) -> List[ServeRequest]:
+    """Stamp one arrival time per request (in order).  Returns the list;
+    raises ValueError on a length mismatch."""
     if len(requests) != len(times):
         raise ValueError("one arrival time per request")
     for r, t in zip(requests, times):

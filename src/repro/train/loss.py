@@ -14,7 +14,11 @@ IGNORE = -1  # label value for unsupervised positions
 def cross_entropy(
     logits: jnp.ndarray, labels: jnp.ndarray
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Mean CE over positions with label >= 0.  Returns (loss, accuracy)."""
+    """Mean CE over positions with label >= 0.  Returns (loss, accuracy).
+
+    The log-softmax is always taken in fp32 so bf16 logits keep full dynamic
+    range in the reduction (mixed-precision safe).
+    """
     mask = (labels >= 0).astype(jnp.float32)
     safe = jnp.maximum(labels, 0)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
@@ -23,6 +27,16 @@ def cross_entropy(
     loss = -jnp.sum(ll * mask) / denom
     acc = jnp.sum((jnp.argmax(logits, -1) == safe).astype(jnp.float32) * mask) / denom
     return loss, acc
+
+
+def supervised_token_count(labels: jnp.ndarray) -> jnp.ndarray:
+    """Number of positions contributing to the CE denominator (label >= 0).
+
+    Gradient accumulation weights each microbatch's mean loss/grad by this
+    count so that k microbatches reproduce the single full-batch token mean
+    even when masking (MLM / HuBERT) gives slices unequal supervision.
+    """
+    return jnp.sum((labels >= 0).astype(jnp.float32))
 
 
 def lm_loss(
@@ -66,6 +80,7 @@ def lm_loss(
         metrics["loss/mtp"] = mtp_ce
 
     metrics["loss/total"] = total
+    metrics["tokens/supervised"] = supervised_token_count(labels)
     return total, metrics
 
 
@@ -80,7 +95,10 @@ def masked_prediction_loss(
     """HuBERT-style: CE on masked frames only (targets = cluster ids)."""
     labels = jnp.where(batch["mask"], batch["labels"], IGNORE)
     ce, acc = cross_entropy(logits, labels)
-    return ce, {"loss/ce": ce, "accuracy": acc, "loss/total": ce}
+    return ce, {
+        "loss/ce": ce, "accuracy": acc, "loss/total": ce,
+        "tokens/supervised": supervised_token_count(labels),
+    }
 
 
 def loss_for(cfg: ModelConfig):

@@ -1,5 +1,20 @@
-"""Train-step factory: value_and_grad → optimizer → apply, with optional
-gradient-accumulation microbatching.
+"""Train-step factory: the large-batch scaling path.
+
+``make_train_step`` assembles the paper's recipe into one jit-able step:
+
+  * **gradient accumulation** — ``lax.scan`` over ``tc.grad_accum_steps``
+    microbatch slices, so ``global_batch = microbatch × accum × DP`` on fixed
+    activation memory.  Each slice's mean loss/grad is weighted by its
+    supervised-token count, so k microbatches reproduce the single
+    full-batch token mean exactly even under MLM/HuBERT masking.
+  * **mixed precision** — ``tc.precision="bf16"`` casts the fp32 master
+    params to bf16 *inside* the loss (activations and matmuls run in bf16,
+    gradients flow back to fp32 masters); optimizer moments and every norm
+    reduction in the trust ratio stay fp32 (see core/strategy, optim/base).
+  * **fused LAMB** — ``tc.use_fused_lamb`` swaps the unfused
+    ``scale_by_adam → trust-ratio → -lr`` transform chain (≈21 N optimizer
+    traffic) for the fused per-leaf update (Pallas kernel on TPU, single
+    fused XLA expression elsewhere; ≈10 N), parity-checked per layer.
 
 ``make_optimizer`` wires the model's pytree metadata (weight-decay mask,
 trust-ratio mask, stacked-layer axes) into the paper's optimizers so that
@@ -12,10 +27,20 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import core, optim
+from repro import core, nn, optim
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.kernels import (
+    fused_lamb,
+    fused_lamb_init,
+    make_fused_lamb_step,
+    resolve_fused_backend,
+)
 from repro.models.api import Model
 from repro.train.loss import loss_for
+
+# Metric key carrying each microbatch's supervised-token count (set by the
+# loss functions); drives token-weighted accumulation below.
+TOKEN_WEIGHT_KEY = "tokens/supervised"
 
 
 class TrainState(NamedTuple):
@@ -24,9 +49,27 @@ class TrainState(NamedTuple):
     step: jnp.ndarray
 
 
+def _wants_fused(model: Model, tc: TrainConfig) -> bool:
+    return bool(tc.use_fused_lamb or model.cfg.use_fused_lamb_kernel)
+
+
+def _check_fused_supported(tc: TrainConfig) -> None:
+    if not tc.bias_correction or tc.moment_dtype is not None:
+        raise ValueError(
+            "fused LAMB supports bias-corrected fp32 moments only; "
+            "unset use_fused_lamb or bias_correction/moment_dtype"
+        )
+
+
 def make_optimizer(
     model: Model, tc: TrainConfig, schedule=None
 ) -> optim.GradientTransformation:
+    """Build the configured optimizer with the model's layerwise metadata.
+
+    Invariant: the returned transformation consumes *token-mean* fp32 grads
+    and returns parameter deltas for ``optim.apply_updates``, on both the
+    fused and unfused LAMB paths.
+    """
     lr = schedule if schedule is not None else tc.learning_rate
     wd_mask = model.wd_mask()
     trust_mask = model.trust_mask()
@@ -36,6 +79,13 @@ def make_optimizer(
         phi_bounds=tc.phi_bounds,
     )
     name = tc.optimizer
+    if name == "lamb" and _wants_fused(model, tc):
+        _check_fused_supported(tc)
+        return fused_lamb(
+            lr, tc.b1, tc.b2, tc.eps, tc.weight_decay,
+            grad_clip_norm=tc.grad_clip_norm,
+            backend=tc.fused_backend, **common,
+        )
     if name == "lamb":
         return core.lamb(
             lr, tc.b1, tc.b2, tc.eps, tc.weight_decay,
@@ -62,18 +112,40 @@ def make_optimizer(
     raise ValueError(f"unknown optimizer {name!r}")
 
 
-def make_loss_fn(model: Model) -> Callable:
+def make_loss_fn(model: Model, compute_dtype: Optional[str] = None) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics) for this model's family.
+
+    ``compute_dtype`` (e.g. ``"bfloat16"``) casts params inside the loss so
+    the forward/backward run in low precision while ``params`` — and hence
+    the gradients that flow back through the cast — stay fp32 masters.
+    (The train step instead casts once *outside* the accumulation scan and
+    passes ``compute_dtype=None`` here, amortizing the cast over microbatches;
+    the gradients w.r.t. the cast copy are identical either way.)
+    """
     loss_impl = loss_for(model.cfg)
 
     def loss_fn(params, batch):
-        logits, aux = model.apply(params, batch)
+        logits, aux = model.apply(params, batch, compute_dtype=compute_dtype)
         return loss_impl(logits, batch, aux, model.cfg, params=params)
 
     return loss_fn
 
 
 def _microbatch_grads(loss_fn, params, batch, n_micro: int):
-    """Sequential grad accumulation over `n_micro` equal batch slices."""
+    """Token-weighted sequential grad accumulation over ``n_micro`` slices.
+
+    Returns fp32 grads equal to the full-batch token-mean gradient:
+    ``g = Σ_i w_i g_i / Σ_i w_i`` with ``w_i`` the slice's supervised-token
+    count (uniform weights when the loss reports none).  Metrics are averaged
+    with the same weights, except ``tokens/supervised`` which is summed.
+    """
+
+    for x in jax.tree.leaves(batch):
+        if x.shape[0] % n_micro:
+            raise ValueError(
+                f"global batch {x.shape[0]} is not divisible by "
+                f"accum_steps {n_micro}; remainder examples would be dropped"
+            )
 
     def slice_batch(b, i):
         return jax.tree.map(
@@ -83,28 +155,33 @@ def _microbatch_grads(loss_fn, params, batch, n_micro: int):
             b,
         )
 
-    def body(carry, i):
-        g_acc, m_acc = carry
+    def one(i):
         (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
             params, slice_batch(batch, i)
         )
-        g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
-        m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
-        return (g_acc, m_acc), None
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+        w = metrics.get(TOKEN_WEIGHT_KEY, jnp.asarray(1.0, jnp.float32))
+        return g, metrics, w
 
-    (l0, m0), g0 = jax.value_and_grad(loss_fn, has_aux=True)(
-        params, slice_batch(batch, 0)
-    )
+    g0, m0, w0 = one(0)
     if n_micro == 1:
         return g0, m0
-    (g, m), _ = jax.lax.scan(
-        body, (g0, m0), jnp.arange(1, n_micro)
-    )
-    inv = 1.0 / n_micro
-    return (
-        jax.tree.map(lambda x: x * inv, g),
-        jax.tree.map(lambda x: x * inv, m),
-    )
+
+    def body(carry, i):
+        g_acc, m_acc, w_acc = carry
+        g, m, w = one(i)
+        g_acc = jax.tree.map(lambda a, b: a + w * b, g_acc, g)
+        m_acc = jax.tree.map(lambda a, b: a + w * b, m_acc, m)
+        return (g_acc, m_acc, w_acc + w), None
+
+    g0w = jax.tree.map(lambda x: w0 * x, g0)
+    m0w = jax.tree.map(lambda x: w0 * x, m0)
+    (g, m, w), _ = jax.lax.scan(body, (g0w, m0w, w0), jnp.arange(1, n_micro))
+    inv = 1.0 / w
+    metrics = jax.tree.map(lambda x: x * inv, m)
+    if TOKEN_WEIGHT_KEY in metrics:
+        metrics[TOKEN_WEIGHT_KEY] = w  # total over the global batch, not mean
+    return jax.tree.map(lambda x: x * inv, g), metrics
 
 
 def make_train_step(
@@ -114,30 +191,91 @@ def make_train_step(
     *,
     optimizer: Optional[optim.GradientTransformation] = None,
 ) -> Tuple[Callable, Callable]:
-    """Returns (init_fn(rng) -> TrainState, step_fn(state, batch) -> (state, metrics))."""
+    """Returns (init_fn(rng) -> TrainState, step_fn(state, batch) -> (state, metrics)).
+
+    ``step_fn`` consumes the *global* batch; accumulation slices it into
+    ``tc.grad_accum_steps`` microbatches internally, so activation memory is
+    bounded by the microbatch while optimizer semantics see the global batch.
+
+    With ``tc.use_fused_lamb`` (and no explicit ``optimizer``), the step
+    bypasses the transform chain entirely and calls the fused LAMB apply
+    in-place on the fp32 masters — no parameter-delta round-trip.
+    """
+    fused_direct = (
+        optimizer is None and tc.optimizer == "lamb" and _wants_fused(model, tc)
+    )
+    loss_fn = make_loss_fn(model)  # cast hoisted into step_fn, see below
+    n_micro = tc.grad_accum_steps
+    compute_dtype = tc.compute_dtype
+
+    def cast_params(params):
+        if compute_dtype is None:
+            return params
+        return nn.cast_tree(params, jnp.dtype(compute_dtype))
+
+    def grads_and_metrics(params, batch):
+        grads, metrics = _microbatch_grads(
+            loss_fn, cast_params(params), batch, n_micro
+        )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = _global_norm(grads)
+        return grads, metrics
+
+    def trust_diag(params, updates):
+        return core.summarize_trust_ratios(
+            core.trust_ratio_tree(
+                params, updates, layer_axes=model.layer_axes(),
+                phi_bounds=tc.phi_bounds,
+            )
+        )
+
+    if fused_direct:
+        _check_fused_supported(tc)
+        fused_step = make_fused_lamb_step(
+            schedule if schedule is not None else tc.learning_rate,
+            tc.b1, tc.b2, tc.eps, tc.weight_decay,
+            wd_mask=model.wd_mask(), trust_mask=model.trust_mask(),
+            layer_axes=model.layer_axes(), phi_bounds=tc.phi_bounds,
+            grad_clip_norm=tc.grad_clip_norm,
+            mode=resolve_fused_backend(tc.fused_backend),
+        )
+
+        def init_fn(rng) -> TrainState:
+            params = model.init(rng)
+            return TrainState(
+                params, fused_lamb_init(params), jnp.zeros([], jnp.int32)
+            )
+
+        def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+            grads, metrics = grads_and_metrics(state.params, batch)
+            params, opt_state = fused_step(state.params, grads, state.opt_state)
+            # same metric schema as the unfused path; the subtraction fuses
+            # into the norm reduction (no materialized delta tree)
+            metrics["update_norm"] = _delta_norm(params, state.params)
+            if tc.log_trust_ratios:
+                updates = jax.tree.map(
+                    lambda new, old: new.astype(jnp.float32)
+                    - old.astype(jnp.float32),
+                    params, state.params,
+                )
+                metrics.update(trust_diag(state.params, updates))
+            return TrainState(params, opt_state, state.step + 1), metrics
+
+        return init_fn, step_fn
+
     opt = optimizer if optimizer is not None else make_optimizer(model, tc, schedule)
-    loss_fn = make_loss_fn(model)
-    n_micro = tc.microbatch or 1
 
     def init_fn(rng) -> TrainState:
         params = model.init(rng)
         return TrainState(params, opt.init(params), jnp.zeros([], jnp.int32))
 
     def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
-        grads, metrics = _microbatch_grads(loss_fn, state.params, batch, n_micro)
+        grads, metrics = grads_and_metrics(state.params, batch)
         updates, opt_state = opt.update(grads, state.opt_state, state.params)
         params = optim.apply_updates(state.params, updates)
-        metrics = dict(metrics)
-        metrics["grad_norm"] = _global_norm(grads)
+        metrics["update_norm"] = _global_norm(updates)
         if tc.log_trust_ratios:
-            metrics.update(
-                core.summarize_trust_ratios(
-                    core.trust_ratio_tree(
-                        state.params, updates, layer_axes=model.layer_axes(),
-                        phi_bounds=tc.phi_bounds,
-                    )
-                )
-            )
+            metrics.update(trust_diag(state.params, updates))
         return TrainState(params, opt_state, state.step + 1), metrics
 
     return init_fn, step_fn
@@ -145,4 +283,13 @@ def make_train_step(
 
 def _global_norm(tree):
     sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(sq)))
+
+
+def _delta_norm(new_tree, old_tree):
+    """Global L2 norm of (new - old) without materializing the delta tree."""
+    sq = [
+        jnp.sum(jnp.square(n.astype(jnp.float32) - o.astype(jnp.float32)))
+        for n, o in zip(jax.tree.leaves(new_tree), jax.tree.leaves(old_tree))
+    ]
     return jnp.sqrt(jnp.sum(jnp.stack(sq)))

@@ -18,23 +18,39 @@ from repro.checkpoint import save_checkpoint
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.mixed_batch import Stage
 from repro.data.pipeline import DataPipeline
+from repro.kernels import FusedLambState
 from repro.models.api import Model
 from repro.optim.base import ScheduleState
 from repro.sharding.context import ShardCtx, use_sharding
 from repro.train.step import TrainState, make_optimizer, make_train_step
 
 
+def _batch_examples(batch) -> int:
+    """Effective global-batch examples in one step: the leading dim of the
+    batch handed to step_fn (= microbatch × accum_steps, since accumulation
+    slices this same batch internally)."""
+    return int(jax.tree.leaves(batch)[0].shape[0])
+
+
 def _reset_schedule_counts(opt_state):
-    """Zero every ScheduleState count (stage-2 re-warm-up) keeping moments."""
+    """Zero every schedule counter (stage-2 re-warm-up) keeping moments.
+
+    Resets ``ScheduleState.count`` in unfused chains and
+    ``FusedLambState.sched_count`` on the fused path; the moment/bias
+    counters carry across stages in both cases (§4.1 procedure).
+    """
+
+    def is_node(n):
+        return isinstance(n, (ScheduleState, FusedLambState))
 
     def reset(node):
         if isinstance(node, ScheduleState):
             return ScheduleState(count=jnp.zeros_like(node.count))
+        if isinstance(node, FusedLambState):
+            return node._replace(sched_count=jnp.zeros_like(node.sched_count))
         return node
 
-    return jax.tree.map(
-        reset, opt_state, is_leaf=lambda n: isinstance(n, ScheduleState)
-    )
+    return jax.tree.map(reset, opt_state, is_leaf=is_node)
 
 
 class Trainer:
@@ -58,6 +74,12 @@ class Trainer:
         self.log_every = log_every
         self.log = log_fn
         self.history: List[Dict[str, float]] = []
+        # Effective examples per optimizer step = microbatch × accum_steps:
+        # step_fn consumes the already-assembled global batch, so its leading
+        # dim *is* the effective global batch regardless of accumulation.
+        # Tracking it here keeps history/benchmarks comparable across
+        # accumulation settings.
+        self.examples_seen: int = 0
         init_fn, step_fn = make_train_step(model, train_cfg, schedule)
         self._init_fn = init_fn
         self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
@@ -78,10 +100,12 @@ class Trainer:
             for i in range(steps):
                 batch = next(data)
                 batch = jax.tree.map(jnp.asarray, batch)
+                self.examples_seen += _batch_examples(batch)
                 self.state, metrics = self._step_fn(self.state, batch)
                 if (i + 1) % self.log_every == 0 or i == steps - 1:
                     m = {k: float(v) for k, v in metrics.items()}
                     m["step"] = int(self.state.step)
+                    m["examples_seen"] = self.examples_seen
                     m["wall_s"] = time.perf_counter() - t0
                     self.history.append(m)
                     self.log(
@@ -129,10 +153,12 @@ class Trainer:
             with use_sharding(self.shard_ctx):
                 for i in range(stage.steps):
                     batch = jax.tree.map(jnp.asarray, next(data))
+                    self.examples_seen += _batch_examples(batch)
                     self.state, metrics = step_jit(self.state, batch)
                     if (i + 1) % self.log_every == 0 or i == stage.steps - 1:
                         m = {k: float(v) for k, v in metrics.items()}
                         m["step"] = int(self.state.step)
+                        m["examples_seen"] = self.examples_seen
                         m["stage"] = si
                         self.history.append(m)
                         self.log(

@@ -1,0 +1,281 @@
+"""Large-batch training path: accumulation equivalence, mixed precision,
+fused-LAMB parity, and the effective-batch telemetry."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core, optim
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data import make_batch
+from repro.kernels import FusedLambState, fused_lamb
+from repro.models import build_model
+from repro.train import Trainer
+from repro.train.step import make_train_step
+from tests.conftest import tiny_dense
+
+RNG = np.random.default_rng(7)
+
+
+def _params_stacked():
+    return {
+        "stack": {"w": jnp.asarray(RNG.standard_normal((3, 24, 8)), jnp.float32)},
+        "emb": jnp.asarray(RNG.standard_normal((64, 8)), jnp.float32),
+        "norm": jnp.ones((8,), jnp.float32),
+    }
+
+
+def _grads_like(params):
+    return jax.tree.map(
+        lambda x: jnp.asarray(RNG.standard_normal(x.shape), jnp.float32), params
+    )
+
+
+# ---------------------------------------------------------------------------
+# accumulation equivalence
+# ---------------------------------------------------------------------------
+
+def test_accum_equivalent_to_full_batch_lamb(key):
+    """k microbatches == one k×batch LAMB step (uniform supervision)."""
+    cfg = tiny_dense(activation_dtype="float32")
+    model = build_model(cfg)
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(cfg, np.random.default_rng(0), 8, 16)
+    )
+    tc_full = TrainConfig(optimizer="lamb", grad_clip_norm=None)
+    tc_acc = TrainConfig(optimizer="lamb", grad_clip_norm=None, accum_steps=4)
+    i1, s1 = make_train_step(model, tc_full)
+    i2, s2 = make_train_step(model, tc_acc)
+    st1, m1 = jax.jit(s1)(i1(key), batch)
+    st2, m2 = jax.jit(s2)(i2(key), batch)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+    assert float(m1["loss/total"]) == pytest.approx(float(m2["loss/total"]), rel=1e-4)
+
+
+def test_accum_equivalent_under_masking(key):
+    """Token-weighted accumulation: equivalence holds when microbatch slices
+    carry *unequal* supervised-token counts (MLM masking)."""
+    cfg = get_config("bert-large").replace(
+        name="bert-mini", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, activation_dtype="float32",
+    )
+    model = build_model(cfg)
+    b = make_batch(cfg, np.random.default_rng(0), 8, 32)
+    counts = [(b["labels"][i * 2:(i + 1) * 2] >= 0).sum() for i in range(4)]
+    assert len(set(int(c) for c in counts)) > 1, "slices should be unequal"
+    batch = jax.tree.map(jnp.asarray, b)
+    tc_full = TrainConfig(optimizer="lamb", grad_clip_norm=None)
+    tc_acc = TrainConfig(optimizer="lamb", grad_clip_norm=None, accum_steps=4)
+    i1, s1 = make_train_step(model, tc_full)
+    i2, s2 = make_train_step(model, tc_acc)
+    st1, m1 = jax.jit(s1)(i1(key), batch)
+    st2, m2 = jax.jit(s2)(i2(key), batch)
+    for a, c in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=2e-4, atol=2e-5)
+    # the accumulated step reports the *total* supervised tokens of the
+    # global batch, equal to the full-batch count
+    assert float(m2["tokens/supervised"]) == pytest.approx(
+        float(m1["tokens/supervised"])
+    )
+
+
+def test_indivisible_accum_raises(key):
+    """batch % accum_steps != 0 must fail loudly, not drop remainder rows."""
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(cfg, np.random.default_rng(0), 4, 16)
+    )
+    tc = TrainConfig(optimizer="lamb", accum_steps=3)
+    init_fn, step_fn = make_train_step(model, tc)
+    with pytest.raises(ValueError, match="not divisible"):
+        jax.jit(step_fn)(init_fn(key), batch)
+
+
+def test_legacy_microbatch_alias(key):
+    """tc.microbatch (PR-0 API) still drives accumulation via grad_accum_steps."""
+    assert TrainConfig(microbatch=4).grad_accum_steps == 4
+    assert TrainConfig(accum_steps=2).grad_accum_steps == 2
+    assert TrainConfig().grad_accum_steps == 1
+
+
+# ---------------------------------------------------------------------------
+# mixed precision
+# ---------------------------------------------------------------------------
+
+def test_bf16_step_keeps_fp32_masters(key):
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(cfg, np.random.default_rng(0), 4, 16)
+    )
+    tc = TrainConfig(optimizer="lamb", precision="bf16", accum_steps=2)
+    init_fn, step_fn = make_train_step(model, tc)
+    st, m = jax.jit(step_fn)(init_fn(key), batch)
+    assert all(
+        x.dtype == jnp.float32
+        for x in jax.tree.leaves(st.params)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+    )
+    assert np.isfinite(float(m["loss/total"]))
+    assert float(m["grad_norm"]) > 0
+
+
+def test_bf16_trust_ratios_match_fp32_bounds(key):
+    """bf16 compute must not blow up the trust ratio: per-step summaries stay
+    within a small factor of the fp32 run (norm reductions are fp32)."""
+    cfg = tiny_dense(activation_dtype="float32")
+    model = build_model(cfg)
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(cfg, np.random.default_rng(0), 4, 16)
+    )
+
+    def summaries(precision):
+        tc = TrainConfig(
+            optimizer="lamb", precision=precision, log_trust_ratios=True
+        )
+        init_fn, step_fn = make_train_step(model, tc)
+        _, m = jax.jit(step_fn)(init_fn(key), batch)
+        return {k: float(v) for k, v in m.items() if k.startswith("trust_ratio/")}
+
+    t32, t16 = summaries("fp32"), summaries("bf16")
+    assert t16["trust_ratio/min"] > 0
+    for k in t32:
+        assert t16[k] == pytest.approx(t32[k], rel=0.15), (k, t32[k], t16[k])
+
+
+def test_unknown_precision_raises():
+    with pytest.raises(ValueError):
+        TrainConfig(precision="fp8").compute_dtype
+
+
+# ---------------------------------------------------------------------------
+# fused LAMB in the train step
+# ---------------------------------------------------------------------------
+
+def test_fused_xla_transform_matches_core_lamb_stacked_and_unstacked():
+    """XLA-fallback fused backend == unfused chain on stacked + unstacked
+    leaves (the Pallas interpret backend is covered in test_kernels)."""
+    params = _params_stacked()
+    la = {"stack": {"w": 0}, "emb": -1, "norm": -1}
+    tm = {"stack": {"w": True}, "emb": True, "norm": False}
+    wm = {"stack": {"w": True}, "emb": True, "norm": False}
+    sched = core.warmup_poly_decay(0.01, 50, 5)
+    o1 = core.lamb(sched, weight_decay=0.01, layer_axes=la, trust_mask=tm,
+                   wd_mask=wm)
+    o2 = fused_lamb(sched, weight_decay=0.01, layer_axes=la, trust_mask=tm,
+                    wd_mask=wm, backend="xla")
+    s1, s2 = o1.init(params), o2.init(params)
+    p1 = p2 = params
+    for _ in range(4):
+        g = _grads_like(params)
+        u1, s1 = o1.update(g, s1, p1)
+        p1 = optim.apply_updates(p1, u1)
+        u2, s2 = o2.update(g, s2, p2)
+        p2 = optim.apply_updates(p2, u2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-5, atol=5e-6)
+
+
+def test_fused_transform_grad_clip_matches_chain():
+    params = _params_stacked()
+    g = jax.tree.map(lambda x: 50.0 * x, _grads_like(params))
+    o1 = core.lamb(0.01, weight_decay=0.01, grad_clip_norm=1.0)
+    o2 = fused_lamb(0.01, weight_decay=0.01, grad_clip_norm=1.0, backend="xla")
+    u1, _ = o1.update(g, o1.init(params), params)
+    u2, _ = o2.update(g, o2.init(params), params)
+    for a, b in zip(jax.tree.leaves(u1), jax.tree.leaves(u2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-5, atol=5e-6)
+
+
+def test_fused_train_step_parity(key):
+    """The direct fused-apply train step tracks the unfused step for several
+    iterations on a real (scanned-stack) model."""
+    cfg = tiny_dense(activation_dtype="float32")
+    model = build_model(cfg)
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(cfg, np.random.default_rng(0), 4, 16)
+    )
+    tc_u = TrainConfig(optimizer="lamb")
+    tc_f = TrainConfig(optimizer="lamb", use_fused_lamb=True, fused_backend="xla")
+    iu, su = make_train_step(model, tc_u)
+    iff, sf = make_train_step(model, tc_f)
+    stu, stf = iu(key), iff(key)
+    assert isinstance(stf.opt_state, FusedLambState)
+    su_j, sf_j = jax.jit(su), jax.jit(sf)
+    for _ in range(3):
+        stu, _ = su_j(stu, batch)
+        stf, _ = sf_j(stf, batch)
+    for a, b in zip(jax.tree.leaves(stu.params), jax.tree.leaves(stf.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_fused_rejects_unsupported_options(key):
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="lamb", use_fused_lamb=True, bias_correction=False)
+    with pytest.raises(ValueError):
+        make_train_step(model, tc)
+
+
+def test_fused_stage_rewarmup_resets_sched_count_only():
+    """fit_stages with fused LAMB: schedule counter restarts, moments age on."""
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    tc = TrainConfig(optimizer="lamb", use_fused_lamb=True, fused_backend="xla")
+    stages = [
+        core.make_stage("s1", 16, 4, 3, base_lr=1e-3, base_batch=4,
+                        base_warmup_ratio=0.25),
+        core.make_stage("s2", 32, 2, 3, base_lr=1e-3, base_batch=4,
+                        base_warmup_ratio=0.25),
+    ]
+    tr = Trainer(model, tc, log_every=1, log_fn=lambda s: None)
+    tr.fit_stages(stages)
+    st: FusedLambState = tr.state.opt_state
+    assert int(tr.state.step) == 6
+    assert int(st.count) == 6          # moments aged across both stages
+    assert int(st.sched_count) == 3    # schedule restarted for stage 2
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_examples_seen_uses_effective_global_batch():
+    """history examples_seen is microbatch × accum — identical across
+    accumulation settings for the same global batch."""
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    batch = make_batch(cfg, np.random.default_rng(0), 8, 16)
+
+    def run(tc):
+        tr = Trainer(model, tc, log_every=1, log_fn=lambda s: None)
+        tr.fit(itertools.repeat(batch), 3)
+        return tr
+
+    tr1 = run(TrainConfig(optimizer="lamb"))
+    tr2 = run(TrainConfig(optimizer="lamb", accum_steps=4))
+    assert tr1.examples_seen == tr2.examples_seen == 24
+    assert tr1.history[-1]["examples_seen"] == 24
+    assert tr2.history[-1]["examples_seen"] == 24
+
+
+def test_step_metrics_include_norm_telemetry(key):
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(cfg, np.random.default_rng(0), 4, 16)
+    )
+    tc = TrainConfig(optimizer="lamb", log_trust_ratios=True, use_fused_lamb=True)
+    init_fn, step_fn = make_train_step(model, tc)
+    _, m = jax.jit(step_fn)(init_fn(key), batch)
+    for k in ("grad_norm", "update_norm", "trust_ratio/mean", "tokens/supervised"):
+        assert k in m, k
+        assert np.isfinite(float(m[k]))
