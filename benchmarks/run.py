@@ -21,6 +21,7 @@ SUITES = [
     ("table4", "benchmarks.table4_recipe_values", "Tables 4-5 recipe values (exact)"),
     ("roofline", "benchmarks.roofline_report", "§Roofline report from dry-run JSONL"),
     ("opt_step", "benchmarks.opt_step_bench", "fused vs unfused LAMB step"),
+    ("attention", "benchmarks.attention_bench", "dense vs flash attention fwd/bwd"),
     ("scaling", "benchmarks.scaling_bench", "accum × precision × fused-LAMB scaling"),
     ("table1", "benchmarks.table1_batch_scaling", "Table 1/4 batch scaling"),
     ("table2", "benchmarks.table2_lamb_vs_lars", "Table 2 LAMB vs LARS"),
@@ -28,7 +29,7 @@ SUITES = [
     ("table3", "benchmarks.table3_optimizer_comparison", "Table 3 tuned baselines"),
 ]
 
-FAST = {"table4", "roofline", "opt_step", "scaling"}
+FAST = {"table4", "roofline", "opt_step", "attention", "scaling"}
 
 
 def main() -> None:

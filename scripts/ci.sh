@@ -9,6 +9,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# fast-fail kernel gate: interpret-mode flash fwd+bwd gradient equivalence
+# (the Pallas kernels run under the interpreter here, so a backward-kernel
+# regression fails CI on CPU in under a minute; the full suite below covers
+# the xla backend and the rest of the flash matrix)
+python -m pytest -q tests/test_kernels.py -k "flash_grad and interpret"
+
 if [[ -n "${CI_FAST:-}" ]]; then
   python -m pytest -x -q -m "not slow"
 else

@@ -20,6 +20,8 @@ CONFIG = ModelConfig(
     norm_type="layernorm",
     use_rope=True,         # positional deviation from learned-absolute; see DESIGN.md
     tie_embeddings=True,
+    use_flash_kernel=True,  # bidirectional flash attention fwd+bwd (Pallas on
+                            # TPU, chunked-XLA elsewhere) — the train hot path
 )
 
 

@@ -1,4 +1,4 @@
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import FlashSpec, flash_attention
 from repro.kernels.lamb_update import lamb_update
 from repro.kernels.ops import (
     FusedLambState,
@@ -7,10 +7,12 @@ from repro.kernels.ops import (
     fused_lamb_apply,
     fused_lamb_init,
     make_fused_lamb_step,
+    resolve_flash_backend,
     resolve_fused_backend,
 )
 
 __all__ = [
+    "FlashSpec",
     "FusedLambState",
     "flash_attention",
     "flash_sdpa",
@@ -19,5 +21,6 @@ __all__ = [
     "fused_lamb_init",
     "lamb_update",
     "make_fused_lamb_step",
+    "resolve_flash_backend",
     "resolve_fused_backend",
 ]

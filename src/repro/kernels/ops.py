@@ -14,8 +14,12 @@ optimizer step (§Perf).  Two backends share one semantics:
   * ``interpret`` — the Pallas kernel in interpret mode (tests only);
   * ``auto``      — ``pallas`` on TPU, ``xla`` elsewhere.
 
-``flash_sdpa`` adapts the flash-attention kernel to the model layout
-(B, S, H, D) with GQA head expansion, for TPU prefill/train paths.
+``flash_sdpa`` adapts the differentiable flash-attention kernel to the
+model layout (B, S, H, D) for the train/prefill paths: GQA is folded into
+the kernel index maps (no materialized K/V repeat), ragged sequence
+lengths are padded to the block multiple and masked via the kernel's
+valid-length path, and ``resolve_flash_backend`` picks Pallas on TPU vs
+the chunked-XLA scan elsewhere (same backend scheme as ``fused_lamb``).
 """
 from __future__ import annotations
 
@@ -235,23 +239,94 @@ def fused_lamb(
     return GradientTransformation(fused_lamb_init, update)
 
 
+def resolve_flash_backend(backend: str = "auto") -> str:
+    """Map ``auto`` to the fastest correct flash backend for this platform.
+
+    Mirrors :func:`resolve_fused_backend`: the Pallas kernels only come back
+    on TPU; elsewhere the chunked-``lax.scan`` XLA implementation (same
+    custom-VJP math, portable) is the default, and ``interpret`` runs the
+    Pallas kernels under the interpreter (tests only — slow).
+    """
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("pallas", "xla", "interpret"):
+        raise ValueError(f"unknown flash backend {backend!r}")
+    return backend
+
+
+def _flash_block(n: int, block: int) -> Tuple[int, int]:
+    """(block_size, pad) so that ``n + pad`` divides ``block_size``.
+
+    Lengths already block-divisible (or short sublane-aligned lengths) pass
+    through unpadded; ragged lengths are padded up to the 128-lane block —
+    this is what lifts the old ``s % 128 == 0`` gate on the kernel path.
+    """
+    b = block if n >= block else n
+    if n % b or b % 8:  # ragged or sublane-misaligned: pad to the full block
+        b = block
+    return b, -n % b
+
+
 def flash_sdpa(
     q: jnp.ndarray,  # (B, S, H, D)  model layout
     k: jnp.ndarray,  # (B, T, Hkv, D)
     v: jnp.ndarray,
     *,
     causal: bool = True,
+    kv_valid: Optional[jnp.ndarray] = None,  # (B,) valid kv lengths
+    window: int = 0,  # sliding-window size; 0 = full attention
     interpret: bool = False,
+    backend: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
 ) -> jnp.ndarray:
-    """Flash attention on the model's (B, S, H, D) layout with GQA."""
+    """Flash attention on the model's (B, S, H, D) layout, GQA folded into
+    the kernel index maps (no materialized K/V repeat), differentiable.
+
+    Ragged sequence lengths are padded to the block multiple here — pad kv
+    rows are masked via the kernel's valid-length path and pad q rows are
+    sliced off (their cotangents are zero, so gradients stay exact).
+    """
     b, s, h, d = q.shape
-    hkv = k.shape[2]
-    if h != hkv:
-        rep = h // hkv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
-    qt = q.transpose(0, 2, 1, 3)
-    kt = k.transpose(0, 2, 1, 3)
+    t, hkv = k.shape[1], k.shape[2]
+    if interpret:
+        # interpret runs the Pallas kernels under the interpreter; an
+        # explicit xla request alongside it is a contradiction, not a
+        # silent override
+        if backend == "xla":
+            raise ValueError("interpret=True conflicts with backend='xla'")
+        mode = "interpret"
+    else:
+        mode = resolve_flash_backend(backend)
+
+    qt = q.transpose(0, 2, 1, 3)          # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)          # (B, Hkv, T, D)
     vt = v.transpose(0, 2, 1, 3)
-    o = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+
+    pad_q = 0
+    if mode in ("pallas", "interpret"):
+        block_q, pad_q = _flash_block(s, block_q)
+        block_k, pad_k = _flash_block(t, block_k)
+        if (causal or window) and pad_q != pad_k:
+            # asymmetric padding would shift the kernel's causal/window row
+            # offset (t - s); self-attention (s == t) pads symmetrically
+            raise ValueError(
+                f"causal/window cross-length ({s},{t}) needs "
+                "block-divisible lengths"
+            )
+        if pad_q:
+            qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        if pad_k:
+            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            if kv_valid is None:
+                kv_valid = jnp.full((b,), t, jnp.int32)
+    # (the xla backend masks its own kv-chunk pad; no pre-padding needed)
+
+    o = flash_attention(
+        qt, kt, vt, kv_valid, causal=causal, window=window, backend=mode,
+        block_q=block_q, block_k=block_k,
+    )
+    if pad_q:
+        o = o[:, :, :s]
     return o.transpose(0, 2, 1, 3)

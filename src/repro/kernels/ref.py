@@ -60,11 +60,14 @@ def flash_attention_ref(
     q: jnp.ndarray,  # (B, H, S, D)
     k: jnp.ndarray,  # (B, H, T, D)
     v: jnp.ndarray,  # (B, H, T, D)
+    kv_valid: Optional[jnp.ndarray] = None,  # (B,) valid kv lengths
     *,
     causal: bool = True,
     scale: Optional[float] = None,
     window: int = 0,
 ) -> jnp.ndarray:
+    """Dense-softmax oracle for the flash kernel (differentiable; the
+    allclose target for both outputs and ``jax.grad`` cotangents)."""
     d = q.shape[-1]
     scale = scale if scale is not None else 1.0 / (d**0.5)
     s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
@@ -76,7 +79,11 @@ def flash_attention_ref(
         mask &= cols <= rows
     if window:
         mask &= cols > rows - window
-    if causal or window:
+    mask = jnp.broadcast_to(mask, (q.shape[0], 1, sq, tk))
+    if kv_valid is not None:
+        valid = jnp.clip(kv_valid.astype(jnp.int32), 1, tk)
+        mask &= cols[None, None] < valid[:, None, None, None]
+    if causal or window or kv_valid is not None:
         s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)

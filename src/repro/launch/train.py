@@ -53,6 +53,11 @@ def main() -> None:
                     help="compute dtype (bf16 keeps fp32 master params)")
     ap.add_argument("--fused-lamb", action="store_true",
                     help="fused LAMB update (Pallas on TPU, XLA fallback)")
+    ap.add_argument("--flash", dest="flash", action="store_true", default=None,
+                    help="force flash attention on (Pallas fwd+bwd kernels "
+                         "on TPU, chunked XLA elsewhere)")
+    ap.add_argument("--no-flash", dest="flash", action="store_false",
+                    help="force the dense attention path")
     ap.add_argument("--log-trust-ratios", action="store_true",
                     help="per-step trust-ratio min/mean/max in history")
     ap.add_argument("--checkpoint-dir", default="")
@@ -65,13 +70,15 @@ def main() -> None:
     if args.accum_steps < 1:
         raise SystemExit(f"--accum-steps must be >= 1, got {args.accum_steps}")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.flash is not None:
+        cfg = cfg.replace(use_flash_kernel=args.flash)
     model = build_model(cfg)
     print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M "
           f"active={model.active_param_count()/1e6:.1f}M")
     print(f"global_batch={args.batch} "
           f"microbatch={args.batch // args.accum_steps} "
           f"accum={args.accum_steps} precision={args.precision} "
-          f"fused_lamb={args.fused_lamb}")
+          f"fused_lamb={args.fused_lamb} flash={cfg.use_flash_kernel}")
 
     shard_ctx = None
     if args.model_parallel > 1 or len(jax.devices()) > 1:

@@ -13,6 +13,7 @@ populated cache.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -24,6 +25,33 @@ from repro.models.layers.embeddings import apply_rope
 from repro.sharding import shard_act
 
 NEG_INF = -1e9
+
+# one warning per (config name, reason): a requested-but-unsupported flash
+# path must be loud, not a silent dense fallback
+_FLASH_FALLBACK_WARNED: set = set()
+
+
+def _flash_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why this attention call can't run on the flash kernel (None = it can).
+
+    Causal/bidirectional, sliding window, GQA, ragged lengths and padding
+    are all kernel-supported; only softcapped logits force the dense path.
+    """
+    if cfg.logit_softcap is not None:
+        return f"logit_softcap={cfg.logit_softcap}"
+    return None
+
+
+def _warn_flash_fallback(cfg: ModelConfig, reason: str) -> None:
+    key = (cfg.name, reason)
+    if key not in _FLASH_FALLBACK_WARNED:
+        _FLASH_FALLBACK_WARNED.add(key)
+        warnings.warn(
+            f"use_flash_kernel=True on {cfg.name!r} but {reason} is not "
+            "supported by the flash kernel; falling back to dense attention "
+            "for these calls",
+            stacklevel=3,
+        )
 
 
 def attention_defs(cfg: ModelConfig) -> dict:
@@ -98,6 +126,7 @@ def attention(
     cache: Optional[dict] = None,
     decode: bool = False,
     window: Optional[int] = "cfg",
+    valid_len: Optional[jnp.ndarray] = None,  # (B,) per-example valid length
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """Full attention block (projections + SDPA + output projection).
 
@@ -105,6 +134,10 @@ def attention(
       train/encoder: cache=None, decode=False
       prefill:       cache=zeros cache, decode=False → returns filled cache
       decode:        cache=filled, decode=True, x is (B, 1, D); positions (B,1)
+
+    ``valid_len`` masks keys at positions >= valid_len[b] in the
+    train/prefill path (ragged MLM batches); both the dense and flash
+    kernels honor it.
     """
     if window == "cfg":
         window = cfg.sliding_window
@@ -150,24 +183,26 @@ def attention(
                     bias, cfg.n_kv_heads, cfg.logit_softcap)
     else:
         s = x.shape[1]
-        use_flash = (
-            cfg.use_flash_kernel
-            and cfg.causal
-            and window is None
-            and cfg.logit_softcap is None
-            and s % 128 == 0
-        )
-        if use_flash:
-            # Pallas flash-attention path (TPU target; interpret on CPU)
+        if valid_len is not None:
+            # both paths attend at least key 0 for fully-padded examples
+            # (their rows carry no loss; this keeps flash ≡ dense exactly)
+            valid_len = jnp.maximum(jnp.asarray(valid_len, jnp.int32), 1)
+        reason = _flash_unsupported_reason(cfg)
+        if cfg.use_flash_kernel and reason is None:
+            # flash path: Pallas kernels on TPU, chunked-XLA fallback
+            # elsewhere; causal/bidirectional (MLM) and sliding-window,
+            # ragged lengths padded+masked inside the wrapper, fwd AND bwd
             from repro.kernels.ops import flash_sdpa
 
             out = flash_sdpa(
-                q, k, v, causal=True,
-                interpret=jax.default_backend() == "cpu",
+                q, k, v, causal=cfg.causal, kv_valid=valid_len,
+                window=window or 0,
             )
         else:
+            if cfg.use_flash_kernel:
+                _warn_flash_fallback(cfg, reason)
             kv_pos = jnp.arange(s, dtype=jnp.int32)
-            bias = _mask_bias(positions, kv_pos, None,
+            bias = _mask_bias(positions, kv_pos, valid_len,
                               causal=cfg.causal, window=window)
             out = _sdpa(q, k, v, bias, cfg.n_kv_heads, cfg.logit_softcap)
         if cache is not None:  # prefill: fill cache[: s]

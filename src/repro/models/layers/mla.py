@@ -86,8 +86,12 @@ def mla_attention(
     *,
     cache: Optional[dict] = None,
     decode: bool = False,
+    valid_len: Optional[jnp.ndarray] = None,  # (B,) per-example valid length
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     dtype = x.dtype
+    if valid_len is not None:
+        # same clamp as attention.py: fully-padded examples keep key 0
+        valid_len = jnp.maximum(jnp.asarray(valid_len, jnp.int32), 1)
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     scale = 1.0 / jnp.sqrt(dn + dr).astype(jnp.float32)
@@ -115,10 +119,12 @@ def mla_attention(
             valid = idx + 1
         new_cache = {"c_kv": ckv, "k_rope": ckr, "index": valid}
         kv_src, kr_src = ckv.astype(dtype), ckr.astype(dtype)
+        if valid_len is not None:  # ragged prefill: example may end < cache
+            valid = jnp.minimum(valid, valid_len)
         bias = _mask(positions, ckv.shape[1], valid)
     else:
         kv_src, kr_src = c_kv, k_rope
-        bias = _mask(positions, x.shape[1], None)
+        bias = _mask(positions, x.shape[1], valid_len)
 
     kv_src = shard_act(kv_src, ("batch", "cache_seq" if decode else "seq", None))
 

@@ -97,15 +97,18 @@ def _one_block(
     cache: Optional[dict],
     decode: bool,
     window,
+    valid_len: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
     h = apply_norm(bp["ln1"], x, cfg.norm_type)
     if cfg.use_mla:
         attn_out, new_cache = mla_attention(
-            bp["attn"], h, positions, cfg, cache=cache, decode=decode
+            bp["attn"], h, positions, cfg, cache=cache, decode=decode,
+            valid_len=valid_len,
         )
     else:
         attn_out, new_cache = attention(
-            bp["attn"], h, positions, cfg, cache=cache, decode=decode, window=window
+            bp["attn"], h, positions, cfg, cache=cache, decode=decode,
+            window=window, valid_len=valid_len,
         )
     x = x + attn_out
     h = apply_norm(bp["ln2"], x, cfg.norm_type)
@@ -126,6 +129,7 @@ def _scan_segment(
     caches: Optional[dict],
     decode: bool,
     window,
+    valid_len: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
     """Scan a homogeneous stack of blocks over the leading layer axis."""
 
@@ -133,7 +137,8 @@ def _scan_segment(
         xc = carry
         bp, cache = xs
         y, new_cache, aux = _one_block(
-            bp, xc, positions, cfg, cache=cache, decode=decode, window=window
+            bp, xc, positions, cfg, cache=cache, decode=decode, window=window,
+            valid_len=valid_len,
         )
         return y, (new_cache, aux)
 
@@ -204,11 +209,15 @@ def forward(
     caches = caches or {}
     aux: Dict[str, jnp.ndarray] = {}
     new_caches: Dict[str, Any] = {}
+    # ragged batches: keys at positions >= valid_len[b] are masked in every
+    # train/prefill attention layer (dense bias and flash kernel alike)
+    valid_len = None if decode else batch.get("valid_len")
 
     if "dense_blocks" in params:
         x, nc, a = _scan_segment(
             params["dense_blocks"], x, positions, cfg,
             caches=caches.get("dense"), decode=decode, window=window,
+            valid_len=valid_len,
         )
         new_caches["dense"] = nc
         aux.update(a)
@@ -216,6 +225,7 @@ def forward(
     x, nc, a = _scan_segment(
         params["blocks"], x, positions, cfg,
         caches=caches.get("main"), decode=decode, window=window,
+        valid_len=valid_len,
     )
     new_caches["main"] = nc
     aux.update({k: (aux[k] + v) / 2 if k in aux else v for k, v in a.items()})
