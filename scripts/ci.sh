@@ -15,10 +15,19 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 # the xla backend and the rest of the flash matrix)
 python -m pytest -q tests/test_kernels.py -k "flash_grad and interpret"
 
+# multi-device gate: sharded train step ≡ single-device on 8 virtual CPU
+# devices (the harness subprocess sets --xla_force_host_platform_device_count
+# before jax init — the flag is dead after backend init, same constraint as
+# the production dry-run).  Skipped under CI_FAST: the dedicated
+# `multidevice` workflow job runs exactly this suite.
+if [[ -z "${CI_FAST:-}" ]]; then
+  python -m pytest -q tests/test_sharded_train.py
+fi
+
 if [[ -n "${CI_FAST:-}" ]]; then
-  python -m pytest -x -q -m "not slow"
+  python -m pytest -x -q -m "not slow" --ignore=tests/test_sharded_train.py
 else
-  python -m pytest -x -q
+  python -m pytest -x -q --ignore=tests/test_sharded_train.py
 fi
 
 # continuous-batching serving smoke: tiny workload, must stream and drain

@@ -4,6 +4,11 @@ A thin production-style wrapper over the deterministic synthetic sources:
   * host-sharded batches (each host generates only its slice)
   * optional device placement with a NamedSharding (global arrays)
   * stage switching (mixed-batch training changes (batch, seq) mid-run)
+
+Placement: pass either an explicit ``sharding`` (applied to every leaf) or a
+``mesh`` — with a mesh, batches are split over its data axes
+(``sharding.batch_sharding``), which is exactly the layout the sharded train
+step declares via ``in_shardings``, so the jit boundary never reshards.
 """
 from __future__ import annotations
 
@@ -15,6 +20,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import batch_iterator
+from repro.sharding.axes import batch_axes, dp_size
+from repro.sharding.placement import batch_sharding
 
 
 class DataPipeline:
@@ -26,8 +33,17 @@ class DataPipeline:
         *,
         seed: int = 0,
         sharding=None,
+        mesh=None,
         prefetch: int = 2,
     ):
+        if mesh is not None and sharding is None:
+            dp = dp_size(mesh)
+            if batch % dp:
+                raise ValueError(
+                    f"batch {batch} is not divisible by the mesh's "
+                    f"data-parallel size {dp} (axes {batch_axes(mesh)})"
+                )
+            sharding = batch_sharding(mesh)
         self.cfg = cfg
         self.batch = batch
         self.seq = seq

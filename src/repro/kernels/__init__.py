@@ -7,6 +7,7 @@ from repro.kernels.ops import (
     fused_lamb_apply,
     fused_lamb_init,
     make_fused_lamb_step,
+    pallas_spec_ok,
     resolve_flash_backend,
     resolve_fused_backend,
 )
@@ -21,6 +22,7 @@ __all__ = [
     "fused_lamb_init",
     "lamb_update",
     "make_fused_lamb_step",
+    "pallas_spec_ok",
     "resolve_flash_backend",
     "resolve_fused_backend",
 ]

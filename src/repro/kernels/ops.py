@@ -28,6 +28,8 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec
+
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lamb_update import lamb_update
 from repro.kernels.ref import lamb_update_ref
@@ -36,6 +38,20 @@ from repro.optim.base import (
     ScalarOrSchedule,
     clip_tree_by_global_norm,
 )
+
+
+def pallas_spec_ok(spec) -> bool:
+    """True if a parameter with this PartitionSpec can feed the Pallas kernel.
+
+    The fused kernel flattens each leaf to a padded ``(layers, P)`` view and
+    grids over it on one device — valid only for replicated leaves.  A leaf
+    sharded on any mesh axis (FSDP ``embed``, TP ``heads``/``ff``) must take
+    the fused-XLA ``lamb_update_ref`` path instead, where GSPMD inserts the
+    collectives that keep the per-layer ‖x‖/‖u‖ trust-ratio reductions
+    *global* across shards.  ``None`` (no spec known) is treated as
+    replicated.
+    """
+    return spec is None or all(e is None for e in spec)
 
 
 class FusedLambState(NamedTuple):
@@ -78,15 +94,21 @@ def fused_lamb_apply(
     layer_axes: Optional[Any] = None,
     phi_bounds: Optional[Tuple[float, float]] = None,
     mode: str = "xla",
+    param_specs: Optional[Any] = None,
 ) -> Tuple[Any, Any, Any]:
     """One fused LAMB step over a whole pytree: (params', mu', nu').
 
     ``count`` is the 1-based step for bias correction and ``lr_t`` the traced
     learning rate; ``mode`` is a *resolved* backend ("pallas" | "xla" |
-    "interpret").  This is the direct-apply core the jit'd train step calls —
-    no parameter-delta round-trip — and also what the ``fused_lamb``
-    GradientTransformation wraps for drop-in composition with the optim API.
-    Invariant: identical math to ``core.lamb`` per layer (parity-tested).
+    "interpret").  ``param_specs`` (a PartitionSpec tree from
+    ``sharding.specs_for``) makes the choice sharding-aware: on the pallas
+    backend, leaves whose sharding crosses the kernel's single-device block
+    layout fall back per-leaf to the fused-XLA path, whose norm reductions
+    GSPMD keeps globally correct (see :func:`pallas_spec_ok`).  This is the
+    direct-apply core the jit'd train step calls — no parameter-delta
+    round-trip — and also what the ``fused_lamb`` GradientTransformation
+    wraps for drop-in composition with the optim API.  Invariant: identical
+    math to ``core.lamb`` per layer (parity-tested).
     """
     la = layer_axes
     if la is None:
@@ -103,11 +125,26 @@ def fused_lamb_apply(
     p_l, g_l = jax.tree.leaves(params), jax.tree.leaves(grads)
     m_l, v_l = jax.tree.leaves(mu), jax.tree.leaves(nu)
     la_l, wm_l, tm_l = jax.tree.leaves(la), jax.tree.leaves(wm), jax.tree.leaves(tm)
+    if param_specs is None:
+        sp_l = [None] * len(p_l)
+    else:
+        sp_l = jax.tree.leaves(
+            param_specs,
+            is_leaf=lambda s: s is None or isinstance(s, PartitionSpec),
+        )
 
     xs, ms, vs = [], [], []
-    for p, g, m, v, axis, wd_on, tr_on in zip(p_l, g_l, m_l, v_l, la_l, wm_l, tm_l):
+    for p, g, m, v, axis, wd_on, tr_on, spec in zip(
+        p_l, g_l, m_l, v_l, la_l, wm_l, tm_l, sp_l
+    ):
         axis = 0 if axis == 0 else None
-        if mode == "xla":
+        leaf_mode = mode
+        if mode != "xla" and not pallas_spec_ok(spec):
+            # sharded leaf: the kernel path (pallas AND its interpret mode)
+            # assumes a single-device block layout; fall back to the fused
+            # XLA expression where GSPMD keeps norm reductions global
+            leaf_mode = "xla"
+        if leaf_mode == "xla":
             x2, m2, v2 = lamb_update_ref(
                 p, g, m, v, lr=lr_t, b1=b1, b2=b2, eps=eps,
                 weight_decay=weight_decay if wd_on else 0.0,
@@ -122,7 +159,7 @@ def fused_lamb_apply(
                 phi_lo=None if phi_bounds is None else phi_bounds[0],
                 phi_hi=None if phi_bounds is None else phi_bounds[1],
                 layer_axis=axis, apply_trust=bool(tr_on),
-                interpret=mode == "interpret",
+                interpret=leaf_mode == "interpret",
             )
         xs.append(x2)
         ms.append(m2)
@@ -158,14 +195,17 @@ def make_fused_lamb_step(
     phi_bounds: Optional[Tuple[float, float]] = None,
     grad_clip_norm: Optional[float] = None,
     mode: str = "xla",
+    param_specs: Optional[Any] = None,
 ):
     """The single stateful fused-LAMB core shared by the transform wrapper
     and the jit'd train step's direct path.
 
     Returns ``step(params, grads, state) -> (new_params, new_state)``:
     clip → count/sched_count advance → lr(sched_count) → fused apply, in
-    that order.  Invariant: keeping this sequence in one place is what
-    guarantees fused-direct vs transform parity.
+    that order.  ``param_specs`` propagates the per-leaf sharded-parameter
+    fallback (see :func:`fused_lamb_apply`).  Invariant: keeping this
+    sequence in one place is what guarantees fused-direct vs transform
+    parity.
     """
 
     def step(params, grads, state: FusedLambState):
@@ -181,7 +221,7 @@ def make_fused_lamb_step(
             params, grads, state.mu, state.nu, count, lr_t,
             b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
             wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
-            phi_bounds=phi_bounds, mode=mode,
+            phi_bounds=phi_bounds, mode=mode, param_specs=param_specs,
         )
         return new_params, FusedLambState(
             count, state.sched_count + 1, new_mu, new_nu
@@ -204,6 +244,7 @@ def fused_lamb(
     grad_clip_norm: Optional[float] = None,
     backend: str = "auto",
     interpret: bool = False,
+    param_specs: Optional[Any] = None,
 ) -> GradientTransformation:
     """LAMB with a fused per-leaf update (Pallas kernel or XLA fallback).
 
@@ -223,6 +264,7 @@ def fused_lamb(
         learning_rate, b1, b2, eps, weight_decay,
         wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
         phi_bounds=phi_bounds, grad_clip_norm=grad_clip_norm, mode=mode,
+        param_specs=param_specs,
     )
 
     def update(grads, state, params=None):

@@ -18,13 +18,12 @@ extract memory / cost / collective roofline terms from the compiled artifact.
 import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
-from typing import Any, Dict, Optional, Tuple  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.common.pytree import tree_leaves_with_paths, tree_map_with_path  # noqa: E402
 from repro.configs import get_config, get_shape, plan  # noqa: E402
 from repro.configs.base import InputShape, ModelConfig, TrainConfig  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -33,7 +32,10 @@ from repro.models import build_model  # noqa: E402
 from repro.serve.engine import make_decode_step, make_prefill_step  # noqa: E402
 from repro.sharding import (  # noqa: E402
     ShardCtx,
+    batch_shardings,
+    cache_shardings,
     default_act_rules,
+    opt_state_shardings,
     resolve_spec,
     shardings_for,
     use_sharding,
@@ -41,80 +43,9 @@ from repro.sharding import (  # noqa: E402
 from repro.train.step import TrainState, make_optimizer, make_train_step  # noqa: E402
 
 
-# ---------------------------------------------------------------------------
-# sharding trees for non-param inputs
-# ---------------------------------------------------------------------------
-
-_BATCH_AXES = {
-    "tokens": ("batch", "seq"),
-    "labels": ("batch", "seq"),
-    "mask": ("batch", "seq"),
-    "frame_embeds": ("batch", "seq", None),
-    "image_embeds": ("batch", None, None),
-}
-
-
-def batch_shardings(batch_abs: Dict[str, Any], mesh, rules) -> Dict[str, Any]:
-    return {
-        k: NamedSharding(mesh, resolve_spec(v.shape, _BATCH_AXES[k], rules, mesh))
-        for k, v in batch_abs.items()
-    }
-
-
-def _cache_leaf_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
-    """Logical axes for a cache leaf, keyed by its trailing name."""
-    name = path.rsplit("/", 1)[-1]
-    lead = (None,)  # stacked layers/groups axis
-    table = {
-        "k": lead + ("batch", "cache_seq", "kv_heads", None),
-        "v": lead + ("batch", "cache_seq", "kv_heads", None),
-        "c_kv": lead + ("batch", "cache_seq", None),
-        "k_rope": lead + ("batch", "cache_seq", None),
-        "index": lead,
-        "ssm": lead + ("batch", "inner", None),
-        "conv": lead + ("batch", None, "inner"),
-        "c": lead + ("batch", "heads", None, None),
-        "n": lead + ("batch", "heads", None),
-        "m": lead + ("batch", "heads"),
-        "h": lead + ("batch", "heads", None),
-    }
-    axes = table.get(name)
-    if axes is None or len(axes) != ndim:
-        return tuple([None] * ndim)
-    return axes
-
-
-def cache_shardings(cache_abs, mesh, rules):
-    return tree_map_with_path(
-        lambda p, leaf: NamedSharding(
-            mesh, resolve_spec(leaf.shape, _cache_leaf_axes(p, len(leaf.shape)),
-                               rules, mesh)
-        ),
-        cache_abs,
-    )
-
-
-def opt_state_shardings(opt_abs, param_shardings, mesh):
-    """Match optimizer-state leaves to parameter shardings by path suffix.
-
-    Moment trees (mu/nu/momentum/accum) reuse their parameter's sharding;
-    scalars (schedule counts) replicate.
-    """
-    by_path = tree_leaves_with_paths(param_shardings)
-    replicated = NamedSharding(mesh, P())
-
-    def match(path: str, leaf):
-        if leaf.ndim == 0:
-            return replicated
-        for ppath, psh in by_path:
-            # component-boundary suffix match ("mu/mask_embed" must not hit
-            # the "embed" parameter)
-            if path == ppath or path.endswith("/" + ppath):
-                return psh
-        return replicated
-
-    return tree_map_with_path(match, opt_abs)
-
+# Placement trees (batch_shardings / cache_shardings / opt_state_shardings)
+# live in repro.sharding.placement — shared with the real Trainer path, so
+# the layouts this dry-run compiles are the layouts training runs.
 
 # ---------------------------------------------------------------------------
 # step builders: (fn, abstract args, in_shardings, donate)

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
         --steps 100 --batch 16 --seq 128 --optimizer lamb [--smoke] \
-        [--mixed-batch] [--checkpoint-dir ckpt/] [--model-parallel 2] \
+        [--mixed-batch] [--checkpoint-dir ckpt/] [--mesh data=8,model=1] \
         [--accum-steps 4] [--precision bf16] [--fused-lamb]
 
 ``--batch`` is the *global* batch; ``--accum-steps k`` runs it as k
@@ -12,6 +12,13 @@ batch-to-the-hardware-limit recipe on fixed memory).  ``--precision bf16``
 computes forward/backward in bf16 against fp32 master params, and
 ``--fused-lamb`` routes the optimizer through the fused update kernel
 (Pallas on TPU, fused XLA elsewhere).
+
+``--mesh data=N,model=M`` runs the step truly sharded: params and LAMB
+moments FSDP-sharded over ``data`` (TP over ``model``), batches split over
+``data``, explicit in/out shardings on the jit'd step (see
+docs/sharding.md).  With no ``--mesh``, multi-device hosts default to
+``data=<all devices>`` (``--model-parallel`` is the legacy spelling for
+the model axis).
 
 ``--smoke`` swaps in the reduced config of the same family (CPU-runnable);
 the full configs are exercised via the dry-run (repro.launch.dryrun).
@@ -27,9 +34,8 @@ from repro.configs import get_config, smoke_config
 from repro.configs.base import TrainConfig
 from repro.core.mixed_batch import make_stage
 from repro.data import DataPipeline
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_mesh_from_spec
 from repro.models import build_model
-from repro.sharding.context import ShardCtx
 from repro.train import Trainer
 
 
@@ -62,7 +68,13 @@ def main() -> None:
                     help="per-step trust-ratio min/mean/max in history")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
-    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--mesh", default="",
+                    help="mesh axes, e.g. data=8,model=1 (uses the first "
+                         "prod(sizes) local devices); params + LAMB moments "
+                         "are FSDP-sharded over data, TP over model")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="legacy spelling: model-axis size of the host mesh "
+                         "(ignored when --mesh is given)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -80,9 +92,13 @@ def main() -> None:
           f"accum={args.accum_steps} precision={args.precision} "
           f"fused_lamb={args.fused_lamb} flash={cfg.use_flash_kernel}")
 
-    shard_ctx = None
-    if args.model_parallel > 1 or len(jax.devices()) > 1:
-        shard_ctx = ShardCtx(make_host_mesh(args.model_parallel))
+    mesh = None
+    if args.mesh:
+        mesh = make_mesh_from_spec(args.mesh)
+    elif args.model_parallel > 1 or len(jax.devices()) > 1:
+        mesh = make_host_mesh(args.model_parallel)
+    if mesh is not None:
+        print(f"mesh={dict(mesh.shape)} devices={mesh.devices.size}")
 
     lr = core.sqrt_scaled_lr(args.base_lr, args.base_batch, args.batch)
     warmup_ratio = core.linear_epoch_warmup_ratio(
@@ -104,7 +120,7 @@ def main() -> None:
         model, tc,
         schedule=core.warmup_poly_decay(
             lr, args.steps, int(args.steps * warmup_ratio)),
-        shard_ctx=shard_ctx,
+        mesh=mesh,
         checkpoint_dir=args.checkpoint_dir or None,
         checkpoint_every=args.checkpoint_every,
         log_every=args.log_every,
@@ -121,17 +137,27 @@ def main() -> None:
                        base_lr=args.base_lr, base_batch=args.base_batch,
                        base_warmup_ratio=args.warmup_ratio),
         ]
-        # every stage batch must slice into accum_steps microbatches, else
-        # stage 2 would crash at trace time after stage 1 already trained
+        # every stage batch must slice into accum_steps microbatches AND
+        # split over the mesh's data axes, else stage 2 would crash after
+        # stage 1 already trained
+        from repro.sharding import dp_size
+
+        dp = 1 if mesh is None else dp_size(mesh)
         for st in stages:
             if st.batch_size % args.accum_steps:
                 raise SystemExit(
                     f"stage {st.name!r} batch {st.batch_size} is not "
                     f"divisible by --accum-steps {args.accum_steps}"
                 )
+            if st.batch_size % dp:
+                raise SystemExit(
+                    f"stage {st.name!r} batch {st.batch_size} is not "
+                    f"divisible by the mesh's data-parallel size {dp}"
+                )
         trainer.fit_stages(stages, data_seed=args.seed)
     else:
-        data = DataPipeline(cfg, args.batch, args.seq, seed=args.seed)
+        data = DataPipeline(cfg, args.batch, args.seq, seed=args.seed,
+                            mesh=mesh)
         trainer.fit(data, args.steps)
 
     final = trainer.history[-1] if trainer.history else {}

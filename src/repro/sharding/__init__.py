@@ -3,6 +3,7 @@ from repro.sharding.axes import (
     constrain,
     default_act_rules,
     default_param_rules,
+    dp_size,
     logical_constraint,
     resolve_spec,
     shardings_for,
@@ -10,18 +11,33 @@ from repro.sharding.axes import (
     specs_for,
 )
 from repro.sharding.context import ShardCtx, shard_act, use_sharding
+from repro.sharding.placement import (
+    batch_sharding,
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    per_device_state_bytes,
+    train_state_shardings,
+)
 
 __all__ = [
     "ShardCtx",
     "batch_axes",
+    "batch_sharding",
+    "batch_shardings",
+    "cache_shardings",
     "constrain",
     "default_act_rules",
     "default_param_rules",
+    "dp_size",
     "logical_constraint",
+    "opt_state_shardings",
+    "per_device_state_bytes",
     "resolve_spec",
     "shard_act",
     "shardings_for",
     "spec_sharding",
     "specs_for",
+    "train_state_shardings",
     "use_sharding",
 ]

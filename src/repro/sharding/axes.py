@@ -22,7 +22,16 @@ MeshAxes = Optional[Tuple[str, ...]]
 
 
 def default_param_rules(multi_pod: bool = False) -> dict:
-    """Default logical→mesh rules: FSDP over (pod,)data, TP/EP over model."""
+    """Default logical→mesh rules for *parameters*.
+
+    FSDP: the ``embed`` axis (present in every matmul weight) shards over
+    the data axes — ``("data",)``, or ``("pod", "data")`` when
+    ``multi_pod`` — so each data-parallel rank holds ``1/N`` of the params
+    and optimizer moments.  Tensor/expert parallelism: head, ff and expert
+    axes shard over ``model``.  Axes mapped to ``None`` always replicate.
+    Callers may copy and override single entries (see
+    ``launch/dryrun.py --param-rule``).
+    """
     fsdp = ("pod", "data") if multi_pod else ("data",)
     return {
         "vocab": ("model",),
@@ -46,6 +55,13 @@ def default_param_rules(multi_pod: bool = False) -> dict:
 
 
 def default_act_rules(multi_pod: bool = False) -> dict:
+    """Default logical→mesh rules for *activations* (data parallel over
+    ``batch``, tensor parallel over head/ff/expert/vocab axes).
+
+    Consumed by :func:`logical_constraint` / ``context.shard_act`` — model
+    code annotates activations with logical names and these rules decide
+    what (if anything) that means on the current mesh.
+    """
     batch = ("pod", "data") if multi_pod else ("data",)
     return {
         "batch": batch,
@@ -74,7 +90,17 @@ def resolve_spec(
     rules: Mapping[str, MeshAxes],
     mesh: Mesh,
 ) -> P:
-    """Resolve one tensor's logical axes into a PartitionSpec."""
+    """Resolve one tensor's logical axes into a PartitionSpec.
+
+    ``shape`` and ``axes`` run in parallel (one logical name — or ``None``
+    — per dimension); ``rules`` maps logical names to mesh-axis tuples and
+    ``mesh`` supplies the axis sizes.  Enforces the XLA constraints from
+    the module docstring: no mesh axis appears twice, and any dimension
+    not divisible by its mesh-axis product gracefully drops trailing axes
+    (down to full replication).  Works with ``jax.sharding.AbstractMesh``
+    too — only ``mesh.shape`` is consulted — so specs can be computed
+    without real devices.
+    """
     used: set = set()
     out = []
     for dim, name in zip(shape, axes):
@@ -104,7 +130,13 @@ def resolve_spec(
 
 
 def specs_for(defs, mesh: Mesh, rules: Optional[Mapping] = None):
-    """PartitionSpec tree for a Param definition tree."""
+    """PartitionSpec tree for a Param definition tree.
+
+    Maps :func:`resolve_spec` over every ``nn.Param`` leaf using its
+    declared logical axes; ``rules`` defaults to
+    :func:`default_param_rules` (FSDP + TP).  The result mirrors the
+    parameter pytree structure and is mesh-device-free (specs only).
+    """
     if rules is None:
         rules = default_param_rules(multi_pod="pod" in mesh.shape)
 
@@ -116,16 +148,27 @@ def specs_for(defs, mesh: Mesh, rules: Optional[Mapping] = None):
 
 
 def shardings_for(defs, mesh: Mesh, rules: Optional[Mapping] = None):
-    """NamedSharding tree for a Param definition tree."""
+    """NamedSharding tree for a Param definition tree.
+
+    :func:`specs_for` bound to a concrete ``mesh`` — ready to pass as jit
+    ``in_shardings``/``out_shardings`` or to ``jax.device_put``.
+    """
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_for(defs, mesh, rules))
 
 
 def spec_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    """Shorthand: ``spec_sharding(mesh, "data", None)`` →
+    ``NamedSharding(mesh, PartitionSpec("data", None))``."""
     return NamedSharding(mesh, P(*spec))
 
 
 def constrain(x, mesh: Mesh, *spec):
-    """with_sharding_constraint helper that is a no-op off-mesh (e.g. unit tests)."""
+    """``with_sharding_constraint`` that degrades to a no-op off-mesh.
+
+    Inside jit on a real mesh this pins ``x`` to ``PartitionSpec(*spec)``;
+    in single-device unit tests (where the constraint would raise) it
+    returns ``x`` unchanged, so library code can annotate unconditionally.
+    """
     try:
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
     except (ValueError, RuntimeError):
@@ -133,11 +176,34 @@ def constrain(x, mesh: Mesh, *spec):
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel mesh axes present on ``mesh`` (``pod`` before ``data``).
+
+    This is the axis tuple the batch dimension shards over — and hence the
+    divisor the global batch size must be a multiple of.
+    """
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
 
+def dp_size(mesh: Mesh) -> int:
+    """Data-parallel way count: product of the :func:`batch_axes` sizes.
+
+    The global batch must be a multiple of this — the single divisor the
+    DataPipeline, Trainer and launcher guards all check against.
+    """
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
 def logical_constraint(x, mesh: Mesh, axes: Sequence[Optional[str]], rules=None):
-    """Apply a sharding constraint from logical activation axis names."""
+    """Apply a sharding constraint from logical activation axis names.
+
+    Resolves ``axes`` (one name per dimension of ``x``) through the
+    activation rules and pins the result — the explicit-mesh sibling of
+    ``context.shard_act``, for call sites that hold a mesh rather than an
+    ambient :class:`~repro.sharding.context.ShardCtx`.
+    """
     if rules is None:
         rules = default_act_rules(multi_pod="pod" in mesh.shape)
     spec = resolve_spec(x.shape, axes, rules, mesh)

@@ -21,6 +21,15 @@ _state = threading.local()
 
 
 class ShardCtx:
+    """A mesh plus the activation rule set annotations resolve against.
+
+    Install with :func:`use_sharding`; model code then sees it through
+    :func:`shard_act`.  ``act_rules`` defaults to
+    :func:`~repro.sharding.axes.default_act_rules` for the mesh's pod
+    structure; :meth:`with_rules` derives a context with single-rule
+    overrides (e.g. ``cache_seq=("data",)`` for long-context decode).
+    """
+
     def __init__(self, mesh: Mesh, act_rules: Optional[Mapping] = None):
         self.mesh = mesh
         self.act_rules = dict(
@@ -30,17 +39,26 @@ class ShardCtx:
         )
 
     def with_rules(self, **overrides) -> "ShardCtx":
+        """New context with the given activation rules replaced."""
         rules = dict(self.act_rules)
         rules.update(overrides)
         return ShardCtx(self.mesh, rules)
 
 
 def current() -> Optional[ShardCtx]:
+    """The ambient :class:`ShardCtx` of this thread, or ``None``."""
     return getattr(_state, "ctx", None)
 
 
 @contextlib.contextmanager
 def use_sharding(ctx: Optional[ShardCtx]):
+    """Install ``ctx`` as the ambient sharding context for the block.
+
+    Must wrap *tracing* (the first call of a jit'd function), not
+    execution: ``shard_act`` reads the context when the constraint is
+    staged out.  Passing ``None`` explicitly disables annotations inside
+    the block (restoring the previous context on exit either way).
+    """
     prev = current()
     _state.ctx = ctx
     try:
@@ -50,7 +68,13 @@ def use_sharding(ctx: Optional[ShardCtx]):
 
 
 def shard_act(x, axes: Sequence[Optional[str]]):
-    """Annotate an activation with logical axes (no-op without a ShardCtx)."""
+    """Annotate activation ``x`` with logical axis names.
+
+    With no ambient context this is the identity (single-device tests);
+    with one, the names resolve through the context's activation rules to
+    a ``with_sharding_constraint`` on the context's mesh.  ``axes`` must
+    name every dimension of ``x`` (use ``None`` for replicated dims).
+    """
     ctx = current()
     if ctx is None:
         return x

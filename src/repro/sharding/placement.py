@@ -1,0 +1,153 @@
+"""Concrete placement: logical specs → NamedShardings for whole step states.
+
+:mod:`repro.sharding.axes` resolves *single tensors* (and Param definition
+trees) into PartitionSpecs.  This module extends that to everything else a
+jit'd step touches — optimizer moments, batches, KV caches, and the full
+``TrainState`` triple — so launchers can hand jit explicit
+``in_shardings``/``out_shardings`` instead of relying on GSPMD inference
+from one annotated input.  The production dry-run and the real ``Trainer``
+path share these helpers; what the dry-run compiles is what training runs.
+
+Conventions encoded here:
+
+  * optimizer moment trees (``mu``/``nu``/``momentum``/``accum``) mirror
+    their parameter's sharding leaf-for-leaf (FSDP shards the whole
+    optimizer, the O(N) win for LAMB's two extra moment buffers);
+  * scalar state (schedule counts, the step counter) replicates;
+  * batches shard their leading (batch) dimension over the data axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.pytree import tree_leaves_with_paths, tree_map_with_path
+from repro.sharding.axes import batch_axes, resolve_spec, shardings_for
+
+# Logical axes of every named model input, keyed by batch-dict field.
+BATCH_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "mask": ("batch", "seq"),
+    "frame_embeds": ("batch", "seq", None),
+    "image_embeds": ("batch", None, None),
+}
+
+
+def batch_shardings(batch_abs: Dict[str, Any], mesh: Mesh, rules) -> Dict[str, Any]:
+    """Per-field NamedShardings for a model input dict (dry-run path).
+
+    Resolves each field's logical axes (:data:`BATCH_AXES`) through the
+    activation rule set, so e.g. ``seq`` can be sharded by a rule override.
+    """
+    return {
+        k: NamedSharding(mesh, resolve_spec(v.shape, BATCH_AXES[k], rules, mesh))
+        for k, v in batch_abs.items()
+    }
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    """One data-parallel NamedSharding for arbitrary batch pytrees.
+
+    Shards the leading (batch) dimension over ``batch_axes(mesh)`` and
+    replicates the rest — valid for every leaf of any batch dict because the
+    spec is shorter than the array rank (trailing dims replicate).  This is
+    the Trainer's placement; :func:`batch_shardings` is the per-field
+    variant the dry-run uses when rule overrides shard non-batch axes.
+    """
+    ba = batch_axes(mesh)
+    return NamedSharding(mesh, P(ba if len(ba) > 1 else ba[0]) if ba else P())
+
+
+def _cache_leaf_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for a KV/SSM cache leaf, keyed by its trailing name."""
+    name = path.rsplit("/", 1)[-1]
+    lead = (None,)  # stacked layers/groups axis
+    table = {
+        "k": lead + ("batch", "cache_seq", "kv_heads", None),
+        "v": lead + ("batch", "cache_seq", "kv_heads", None),
+        "c_kv": lead + ("batch", "cache_seq", None),
+        "k_rope": lead + ("batch", "cache_seq", None),
+        "index": lead,
+        "ssm": lead + ("batch", "inner", None),
+        "conv": lead + ("batch", None, "inner"),
+        "c": lead + ("batch", "heads", None, None),
+        "n": lead + ("batch", "heads", None),
+        "m": lead + ("batch", "heads"),
+        "h": lead + ("batch", "heads", None),
+    }
+    axes = table.get(name)
+    if axes is None or len(axes) != ndim:
+        return tuple([None] * ndim)
+    return axes
+
+
+def cache_shardings(cache_abs, mesh: Mesh, rules):
+    """NamedSharding tree for a ``make_cache`` pytree (decode/prefill)."""
+    return tree_map_with_path(
+        lambda p, leaf: NamedSharding(
+            mesh, resolve_spec(leaf.shape, _cache_leaf_axes(p, len(leaf.shape)),
+                               rules, mesh)
+        ),
+        cache_abs,
+    )
+
+
+def opt_state_shardings(opt_abs, param_shardings, mesh: Mesh):
+    """Match optimizer-state leaves to parameter shardings by path suffix.
+
+    Moment trees (mu/nu/momentum/accum) reuse their parameter's sharding;
+    scalars (schedule counts) replicate.  The suffix match is component-
+    boundary aware: ``mu/mask_embed`` must not hit the ``embed`` parameter.
+    """
+    by_path = tree_leaves_with_paths(param_shardings)
+    replicated = NamedSharding(mesh, P())
+
+    def match(path: str, leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return replicated
+        for ppath, psh in by_path:
+            if path == ppath or path.endswith("/" + ppath):
+                return psh
+        return replicated
+
+    return tree_map_with_path(match, opt_abs)
+
+
+def per_device_state_bytes(tree) -> int:
+    """Max over devices of resident bytes for a pytree of (sharded) arrays.
+
+    Sums actual shard buffer sizes per device — the measured FSDP win
+    (tests/test_sharded_train.py asserts ≥4× on ``data=8``, and
+    ``benchmarks/sharding_bench.py`` records it in BENCH_sharding.json).
+    Non-array leaves (and abstract values) contribute nothing.
+    """
+    per: Dict[int, int] = {}
+    for leaf in jax.tree.leaves(tree):
+        for s in getattr(leaf, "addressable_shards", []):
+            per[s.device.id] = per.get(s.device.id, 0) + s.data.nbytes
+    return max(per.values()) if per else 0
+
+
+def train_state_shardings(
+    defs, abstract_state, mesh: Mesh, rules: Optional[Mapping] = None
+):
+    """Shardings for a full ``TrainState`` (params, opt_state, step).
+
+    ``abstract_state`` is the ShapeDtypeStruct tree from
+    ``jax.eval_shape(init_fn, rng)`` — this works for any optimizer state
+    layout (fused ``FusedLambState`` or unfused transform chains) because
+    moment leaves are matched to parameters by path suffix, not by
+    structure.  Returns the same NamedTuple type populated with
+    NamedShardings, ready to pass as jit ``in_shardings``/``out_shardings``.
+    """
+    psh = shardings_for(defs, mesh, rules)
+    osh = opt_state_shardings(abstract_state.opt_state, psh, mesh)
+    replicated = NamedSharding(mesh, P())
+    rest = {
+        f: replicated for f in abstract_state._fields
+        if f not in ("params", "opt_state")
+    }
+    return type(abstract_state)(params=psh, opt_state=osh, **rest)

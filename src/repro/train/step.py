@@ -62,9 +62,14 @@ def _check_fused_supported(tc: TrainConfig) -> None:
 
 
 def make_optimizer(
-    model: Model, tc: TrainConfig, schedule=None
+    model: Model, tc: TrainConfig, schedule=None, *, param_specs=None
 ) -> optim.GradientTransformation:
     """Build the configured optimizer with the model's layerwise metadata.
+
+    ``param_specs`` (a PartitionSpec tree from ``sharding.specs_for``) makes
+    the fused-LAMB path sharding-aware: FSDP/TP-sharded leaves fall back
+    per-leaf from the Pallas kernel to the fused-XLA update, whose
+    trust-ratio norm reductions GSPMD keeps globally correct.
 
     Invariant: the returned transformation consumes *token-mean* fp32 grads
     and returns parameter deltas for ``optim.apply_updates``, on both the
@@ -84,7 +89,7 @@ def make_optimizer(
         return fused_lamb(
             lr, tc.b1, tc.b2, tc.eps, tc.weight_decay,
             grad_clip_norm=tc.grad_clip_norm,
-            backend=tc.fused_backend, **common,
+            backend=tc.fused_backend, param_specs=param_specs, **common,
         )
     if name == "lamb":
         return core.lamb(
@@ -190,6 +195,7 @@ def make_train_step(
     schedule=None,
     *,
     optimizer: Optional[optim.GradientTransformation] = None,
+    param_specs=None,
 ) -> Tuple[Callable, Callable]:
     """Returns (init_fn(rng) -> TrainState, step_fn(state, batch) -> (state, metrics)).
 
@@ -200,6 +206,11 @@ def make_train_step(
     With ``tc.use_fused_lamb`` (and no explicit ``optimizer``), the step
     bypasses the transform chain entirely and calls the fused LAMB apply
     in-place on the fp32 masters — no parameter-delta round-trip.
+
+    ``step_fn`` is mesh-agnostic: under a sharded launch the Trainer jits it
+    with explicit ``in_shardings``/``out_shardings`` (see
+    ``sharding.train_state_shardings``), and ``param_specs`` carries the
+    parameter PartitionSpecs into the fused-LAMB per-leaf backend choice.
     """
     fused_direct = (
         optimizer is None and tc.optimizer == "lamb" and _wants_fused(model, tc)
@@ -238,6 +249,7 @@ def make_train_step(
             layer_axes=model.layer_axes(), phi_bounds=tc.phi_bounds,
             grad_clip_norm=tc.grad_clip_norm,
             mode=resolve_fused_backend(tc.fused_backend),
+            param_specs=param_specs,
         )
 
         def init_fn(rng) -> TrainState:
@@ -263,7 +275,11 @@ def make_train_step(
 
         return init_fn, step_fn
 
-    opt = optimizer if optimizer is not None else make_optimizer(model, tc, schedule)
+    opt = (
+        optimizer
+        if optimizer is not None
+        else make_optimizer(model, tc, schedule, param_specs=param_specs)
+    )
 
     def init_fn(rng) -> TrainState:
         params = model.init(rng)

@@ -4,6 +4,17 @@ stages (the paper's two-phase BERT recipe with stage-2 re-warm-up).
 Across a stage switch the optimizer *moments* (m, v — ScaleByAdamState /
 TraceState) carry over, while schedule counters restart at zero so stage 2
 re-warms up — exactly the §4.1 procedure.
+
+Sharded training (``mesh=``): the paper's headline run scales LAMB's batch
+across a TPU pod, so the step must actually *run* data-parallel.  Given a
+mesh, the Trainer computes explicit placements once at construction —
+params and every LAMB moment FSDP-sharded via ``sharding.specs_for`` /
+``train_state_shardings``, batches split over the data axes — and jits the
+step with ``in_shardings``/``out_shardings`` (+ donated state), so XLA
+compiles a true SPMD program instead of inferring layouts from one input.
+Parameter init runs under partitionable threefry, making initial values
+invariant to the mesh shape (the legacy RNG lowering changes bits when its
+output is sharded).
 """
 from __future__ import annotations
 
@@ -21,7 +32,9 @@ from repro.data.pipeline import DataPipeline
 from repro.kernels import FusedLambState
 from repro.models.api import Model
 from repro.optim.base import ScheduleState
+from repro.sharding.axes import batch_axes, dp_size, specs_for
 from repro.sharding.context import ShardCtx, use_sharding
+from repro.sharding.placement import batch_sharding, train_state_shardings
 from repro.train.step import TrainState, make_optimizer, make_train_step
 
 
@@ -60,6 +73,7 @@ class Trainer:
         train_cfg: TrainConfig,
         *,
         schedule=None,
+        mesh=None,
         shard_ctx: Optional[ShardCtx] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
@@ -68,7 +82,10 @@ class Trainer:
     ):
         self.model = model
         self.tc = train_cfg
+        self.mesh = mesh
         self.shard_ctx = shard_ctx
+        if mesh is not None and shard_ctx is None:
+            self.shard_ctx = ShardCtx(mesh)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self.log_every = log_every
@@ -80,16 +97,77 @@ class Trainer:
         # Tracking it here keeps history/benchmarks comparable across
         # accumulation settings.
         self.examples_seen: int = 0
-        init_fn, step_fn = make_train_step(model, train_cfg, schedule)
+
+        self._param_specs = None
+        self._batch_sharding = None
+        self._state_sharding = None
+        self._dp_size = 1
+        if mesh is not None:
+            self._param_specs = specs_for(model.defs, mesh)
+            self._batch_sharding = batch_sharding(mesh)
+            self._dp_size = dp_size(mesh)
+        init_fn, step_fn = make_train_step(
+            model, train_cfg, schedule, param_specs=self._param_specs
+        )
         self._init_fn = init_fn
-        self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        if mesh is not None:
+            abstract = jax.eval_shape(init_fn, jax.random.key(train_cfg.seed))
+            self._state_sharding = train_state_shardings(
+                model.defs, abstract, mesh
+            )
+        self._step_fn = self._jit_step(step_fn)
         self.state: Optional[TrainState] = None
+
+    # ------------------------------------------------------------------
+    def _jit_step(self, step_fn: Callable) -> Callable:
+        """jit a (state, batch) step, with explicit placements on a mesh.
+
+        Donating the state argument lets XLA update params/moments in place
+        — without it the sharded step would double the resident optimizer
+        memory.  Metric outputs are left unconstrained (scalars replicate).
+        """
+        if self._state_sharding is None:
+            return jax.jit(step_fn, donate_argnums=(0,))
+        return jax.jit(
+            step_fn,
+            in_shardings=(self._state_sharding, self._batch_sharding),
+            out_shardings=(self._state_sharding, None),
+            donate_argnums=(0,),
+        )
+
+    def _place_batch(self, batch):
+        """Device-put a host batch (splitting over the data axes on a mesh)."""
+        if self._batch_sharding is None:
+            return jax.tree.map(jnp.asarray, batch)
+        n = _batch_examples(batch)
+        if n % self._dp_size:
+            raise ValueError(
+                f"global batch {n} is not divisible by the mesh's "
+                f"data-parallel size {self._dp_size} "
+                f"(axes {batch_axes(self.mesh)}); examples would be dropped"
+            )
+        def place(x):
+            # already committed to the step's layout (DataPipeline(mesh=)):
+            # re-placing would gather the global batch to host every step
+            if getattr(x, "sharding", None) == self._batch_sharding:
+                return x
+            return jax.device_put(np.asarray(x), self._batch_sharding)
+
+        return jax.tree.map(place, batch)
 
     # ------------------------------------------------------------------
     def init(self, seed: Optional[int] = None) -> TrainState:
         rng = jax.random.key(self.tc.seed if seed is None else seed)
-        with use_sharding(self.shard_ctx):
-            self.state = jax.jit(self._init_fn)(rng)
+        # Partitionable threefry makes init values independent of the mesh
+        # shape (and of sharded vs single-device execution) — required for
+        # the sharded ≡ single-device equivalence this Trainer guarantees.
+        with use_sharding(self.shard_ctx), jax.threefry_partitionable(True):
+            if self._state_sharding is None:
+                self.state = jax.jit(self._init_fn)(rng)
+            else:
+                self.state = jax.jit(
+                    self._init_fn, out_shardings=self._state_sharding
+                )(rng)
         return self.state
 
     def fit(self, data, steps: int) -> List[Dict[str, float]]:
@@ -98,8 +176,7 @@ class Trainer:
         t0 = time.perf_counter()
         with use_sharding(self.shard_ctx):
             for i in range(steps):
-                batch = next(data)
-                batch = jax.tree.map(jnp.asarray, batch)
+                batch = self._place_batch(next(data))
                 self.examples_seen += _batch_examples(batch)
                 self.state, metrics = self._step_fn(self.state, batch)
                 if (i + 1) % self.log_every == 0 or i == steps - 1:
@@ -135,11 +212,15 @@ class Trainer:
                 f"batch={stage.batch_size} steps={stage.steps} "
                 f"lr={stage.learning_rate:.2e} warmup={stage.warmup_steps}"
             )
-            opt = make_optimizer(self.model, self.tc, stage.schedule)
-            _, step_fn = make_train_step(
-                self.model, self.tc, stage.schedule, optimizer=opt
+            opt = make_optimizer(
+                self.model, self.tc, stage.schedule,
+                param_specs=self._param_specs,
             )
-            step_jit = jax.jit(step_fn, donate_argnums=(0,))
+            _, step_fn = make_train_step(
+                self.model, self.tc, stage.schedule, optimizer=opt,
+                param_specs=self._param_specs,
+            )
+            step_jit = self._jit_step(step_fn)
             if si > 0:
                 # re-warm-up: keep moments, restart schedule counters
                 self.state = TrainState(
@@ -152,7 +233,7 @@ class Trainer:
             )
             with use_sharding(self.shard_ctx):
                 for i in range(stage.steps):
-                    batch = jax.tree.map(jnp.asarray, next(data))
+                    batch = self._place_batch(next(data))
                     self.examples_seen += _batch_examples(batch)
                     self.state, metrics = step_jit(self.state, batch)
                     if (i + 1) % self.log_every == 0 or i == stage.steps - 1:

@@ -1,0 +1,249 @@
+"""Multi-device harness for the sharded train path (run as a subprocess).
+
+Forces 8 virtual CPU devices via XLA_FLAGS *before* importing jax — the flag
+only takes effect at backend init, which is why tests/test_sharded_train.py
+runs this file as a subprocess (the pytest process already initialized jax
+on the single real CPU device; same pattern as the production dry-run).
+
+    PYTHONPATH=src python tests/sharded_harness.py [scenario ...]
+
+Prints one JSON object on the last stdout line.  Scenarios:
+
+  equiv        sharded step ≡ single-device step (unfused / fused /
+               accum2+bf16, on data=8 and data=4,model=2 meshes)
+  mlm_flash    the paper path: bert-smoke MLM through flash attention,
+               fused LAMB, sharded ≡ single-device
+  stages       mixed-batch fit_stages re-jits correctly on a mesh
+  checkpoint   FSDP state saved on data=8 restores onto data=4,model=2
+               (values, placements, and a post-restore step)
+  memory       per-device param+optimizer bytes: FSDP vs unsharded, live
+               arrays + compiled per-device argument sizes
+  guards       clear errors for non-divisible batches
+"""
+import json
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint  # noqa: E402
+from repro.configs import smoke_config  # noqa: E402
+from repro.configs.base import ModelConfig, TrainConfig  # noqa: E402
+from repro.core import make_stage  # noqa: E402
+from repro.data import DataPipeline  # noqa: E402
+from repro.launch.mesh import make_mesh_from_spec  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.sharding import shardings_for, train_state_shardings  # noqa: E402
+from repro.train import Trainer  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+TINY = ModelConfig(
+    name="tiny-sharded", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256, tie_embeddings=True,
+)
+MESHES = ("data=8,model=1", "data=4,model=2")
+BATCH, SEQ, STEPS = 16, 32, 3
+
+
+def _fit(cfg, tc, mesh_spec=None, steps=STEPS, batch=BATCH, seq=SEQ):
+    mesh = make_mesh_from_spec(mesh_spec) if mesh_spec else None
+    model = build_model(cfg)
+    tr = Trainer(model, tc, mesh=mesh, log_every=1000, log_fn=lambda s: None)
+    data = DataPipeline(cfg, batch, seq, seed=0, mesh=mesh)
+    tr.fit(data, steps)
+    return tr
+
+
+def _maxdiff(a, b) -> float:
+    # gather to host first: operands may be committed to different meshes
+    d = jax.tree.map(
+        lambda x, y: float(
+            np.max(np.abs(
+                np.asarray(x).astype(np.float32)
+                - np.asarray(y).astype(np.float32)
+            ))
+        ),
+        a, b,
+    )
+    return max(jax.tree.leaves(d))
+
+
+def _equiv_entry(cfg, tc):
+    base = _fit(cfg, tc)
+    out = {}
+    for spec in MESHES:
+        tr = _fit(cfg, tc, spec)
+        out[spec] = {
+            "param_maxdiff": _maxdiff(tr.state.params, base.state.params),
+            "loss_diff": abs(
+                tr.history[-1]["loss/total"] - base.history[-1]["loss/total"]
+            ),
+            "loss": tr.history[-1]["loss/total"],
+        }
+    return out
+
+
+def scenario_equiv():
+    return {
+        "unfused": _equiv_entry(
+            TINY, TrainConfig(optimizer="lamb", learning_rate=1e-3)
+        ),
+        "fused": _equiv_entry(
+            TINY,
+            TrainConfig(optimizer="lamb", learning_rate=1e-3,
+                        use_fused_lamb=True),
+        ),
+        "accum2_bf16": _equiv_entry(
+            TINY,
+            TrainConfig(optimizer="lamb", learning_rate=1e-3, accum_steps=2,
+                        precision="bf16"),
+        ),
+    }
+
+
+def scenario_mlm_flash():
+    cfg = smoke_config("bert-large")  # MLM + use_flash_kernel=True
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
+    return _equiv_entry(cfg, tc)
+
+
+def scenario_stages():
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
+    mesh = make_mesh_from_spec("data=8,model=1")
+    model = build_model(TINY)
+    tr = Trainer(model, tc, mesh=mesh, log_every=1000, log_fn=lambda s: None)
+    stages = [
+        make_stage("s1", SEQ, 16, 2, base_lr=1e-3, base_batch=16,
+                   base_warmup_ratio=0.25),
+        make_stage("s2", SEQ * 2, 8, 2, base_lr=1e-3, base_batch=16,
+                   base_warmup_ratio=0.25),
+    ]
+    tr.fit_stages(stages)
+    return {
+        "final_step": int(tr.state.step),
+        "final_loss": tr.history[-1]["loss/total"],
+        "finite": bool(np.isfinite(tr.history[-1]["loss/total"])),
+    }
+
+
+def scenario_checkpoint(tmpdir="/tmp/sharded_harness_ckpt"):
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
+    tr = _fit(TINY, tc, "data=8,model=1", steps=2)
+    path = save_checkpoint(tmpdir, int(tr.state.step), tr.state)
+
+    # restore the full TrainState onto a *different* mesh shape
+    mesh2 = make_mesh_from_spec("data=4,model=2")
+    model = build_model(TINY)
+    init_fn, step_fn = make_train_step(model, tc)
+    abstract = jax.eval_shape(init_fn, jax.random.key(0))
+    ssh2 = train_state_shardings(model.defs, abstract, mesh2)
+    restored = restore_checkpoint(path, abstract, shardings=ssh2)
+
+    param_maxdiff = _maxdiff(restored.params, tr.state.params)
+    moment_maxdiff = _maxdiff(restored.opt_state.mu, tr.state.opt_state.mu)
+    # every restored leaf must be committed to its target sharding
+    flat_ok = all(
+        leaf.sharding == sh
+        for leaf, sh in zip(
+            jax.tree.leaves(restored.params), jax.tree.leaves(ssh2.params)
+        )
+    )
+    # the restored state must be usable: one more sharded step on mesh2
+    tr2 = Trainer(model, tc, mesh=mesh2, log_every=1000, log_fn=lambda s: None)
+    tr2.state = restored
+    data = DataPipeline(TINY, BATCH, SEQ, seed=1, mesh=mesh2)
+    tr2.fit(data, 1)
+    return {
+        "param_maxdiff": param_maxdiff,
+        "moment_maxdiff": moment_maxdiff,
+        "shardings_match": bool(flat_ok),
+        "post_restore_step": int(tr2.state.step),
+        "post_restore_loss_finite": bool(
+            np.isfinite(tr2.history[-1]["loss/total"])
+        ),
+    }
+
+
+def scenario_memory():
+    from repro.sharding import per_device_state_bytes
+
+    cfg = smoke_config("bert-large")
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
+    sharded = _fit(cfg, tc, "data=8,model=1", steps=1)
+    single = _fit(cfg, tc, steps=1)
+
+    fsdp = per_device_state_bytes(sharded.state.params) + per_device_state_bytes(
+        sharded.state.opt_state
+    )
+    base = per_device_state_bytes(single.state.params) + per_device_state_bytes(
+        single.state.opt_state
+    )
+
+    def compiled_arg_bytes(tr, batch):
+        try:
+            c = tr._step_fn.lower(tr.state, tr._place_batch(batch)).compile()
+            ma = c.memory_analysis()
+            return {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+            }
+        except Exception as e:  # memory_analysis is backend-dependent
+            return {"error": f"{type(e).__name__}: {e}"}
+
+    batch = next(DataPipeline(cfg, BATCH, SEQ, seed=0))
+    return {
+        "fsdp_per_device_state_bytes": fsdp,
+        "single_device_state_bytes": base,
+        "state_ratio": base / max(fsdp, 1),
+        "compiled_sharded": compiled_arg_bytes(sharded, batch),
+        "compiled_single": compiled_arg_bytes(single, batch),
+    }
+
+
+def scenario_guards():
+    out = {}
+    try:
+        DataPipeline(TINY, 6, SEQ, mesh=make_mesh_from_spec("data=4,model=2"))
+        out["pipeline_raises"] = False
+    except ValueError as e:
+        out["pipeline_raises"] = True
+        out["pipeline_msg"] = str(e)
+    try:
+        tc = TrainConfig(optimizer="lamb")
+        tr = Trainer(build_model(TINY), tc,
+                     mesh=make_mesh_from_spec("data=8,model=1"),
+                     log_fn=lambda s: None)
+        tr.init()
+        tr._place_batch({"tokens": np.zeros((6, SEQ), np.int32)})
+        out["trainer_raises"] = False
+    except ValueError as e:
+        out["trainer_raises"] = True
+        out["trainer_msg"] = str(e)
+    return out
+
+
+SCENARIOS = {
+    "equiv": scenario_equiv,
+    "mlm_flash": scenario_mlm_flash,
+    "stages": scenario_stages,
+    "checkpoint": scenario_checkpoint,
+    "memory": scenario_memory,
+    "guards": scenario_guards,
+}
+
+
+def main(argv):
+    names = argv or list(SCENARIOS)
+    out = {"devices": len(jax.devices())}
+    for name in names:
+        out[name] = SCENARIOS[name]()
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

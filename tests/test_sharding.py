@@ -6,19 +6,10 @@ import sys
 
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import abstract_mesh
 from repro.sharding import default_act_rules, default_param_rules, resolve_spec
-
-
-def abstract_mesh(shape, names):
-    """AbstractMesh across JAX API generations: newer releases take
-    (axis_sizes, axis_names); jax 0.4.x takes one ((name, size), ...) tuple."""
-    try:
-        return AbstractMesh(shape, names)
-    except TypeError:
-        return AbstractMesh(tuple(zip(names, shape)))
-
 
 MESH_1POD = abstract_mesh((16, 16), ("data", "model"))
 MESH_2POD = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
