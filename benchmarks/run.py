@@ -22,6 +22,7 @@ SUITES = [
     ("roofline", "benchmarks.roofline_report", "§Roofline report from dry-run JSONL"),
     ("opt_step", "benchmarks.opt_step_bench", "fused vs unfused LAMB step"),
     ("attention", "benchmarks.attention_bench", "dense vs flash attention fwd/bwd"),
+    ("train_step", "benchmarks.train_step_bench", "dense vs fused-CE MLM head step"),
     ("sharding", "benchmarks.sharding_bench", "per-device state memory vs mesh size"),
     ("scaling", "benchmarks.scaling_bench", "accum × precision × fused-LAMB scaling"),
     ("table1", "benchmarks.table1_batch_scaling", "Table 1/4 batch scaling"),
@@ -30,7 +31,8 @@ SUITES = [
     ("table3", "benchmarks.table3_optimizer_comparison", "Table 3 tuned baselines"),
 ]
 
-FAST = {"table4", "roofline", "opt_step", "attention", "sharding", "scaling"}
+FAST = {"table4", "roofline", "opt_step", "attention", "train_step", "sharding",
+        "scaling"}
 
 
 def main() -> None:

@@ -15,6 +15,11 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 # the xla backend and the rest of the flash matrix)
 python -m pytest -q tests/test_kernels.py -k "flash_grad and interpret"
 
+# fast-fail fused-CE gate: interpret-mode chunked-vocab CE gradients vs the
+# dense oracle (same pattern as the flash gate; the full fused-head matrix
+# — backends × precision × supervision — runs in the suite below)
+python -m pytest -q tests/test_fused_ce.py -k "grad and interpret"
+
 # multi-device gate: sharded train step ≡ single-device on 8 virtual CPU
 # devices (the harness subprocess sets --xla_force_host_platform_device_count
 # before jax init — the flag is dead after backend init, same constraint as

@@ -7,6 +7,7 @@ are hashable (usable as jit static args).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 
@@ -84,6 +85,11 @@ class ModelConfig:
     remat: str = "none"            # none | full
     use_flash_kernel: bool = False # route attention through the Pallas kernel
     use_fused_lamb_kernel: bool = False
+    use_fused_ce_head: bool = False  # fused MLM head: supervised-position
+                                     # gather + chunked-vocab CE (no logits)
+    fused_ce_backend: str = "auto"   # auto | pallas | xla | interpret
+    mlm_max_predictions: Optional[int] = None  # fused-head gather buffer P;
+                                     # default ceil(mask_ratio * seq_len)
 
     # --- optimizer interaction ---
     lamb_granularity: str = "slice"  # slice (per stacked layer) | leaf
@@ -92,6 +98,21 @@ class ModelConfig:
         if self.head_dim is None:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
         assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA group mismatch"
+
+    def mlm_buffer_size(self, seq_len: int) -> int:
+        """The fused-CE head's gather-buffer size P for this sequence length.
+
+        ``mlm_max_predictions`` when set; otherwise ``ceil(mask_ratio · S)``
+        (BERT's ``max_predictions_per_seq``), or S for unmasked objectives.
+        This is the single source of truth for P: the loss sizes its gather
+        buffer from it AND the synthetic MLM pipeline caps per-row target
+        counts at it, so the two can never disagree.
+        """
+        if self.mlm_max_predictions is not None:
+            return max(1, min(self.mlm_max_predictions, seq_len))
+        if self.mask_ratio > 0:
+            return max(1, min(seq_len, math.ceil(self.mask_ratio * seq_len)))
+        return seq_len
 
     @property
     def q_groups(self) -> int:

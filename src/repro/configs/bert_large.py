@@ -22,6 +22,8 @@ CONFIG = ModelConfig(
     tie_embeddings=True,
     use_flash_kernel=True,  # bidirectional flash attention fwd+bwd (Pallas on
                             # TPU, chunked-XLA elsewhere) — the train hot path
+    use_fused_ce_head=True, # MLM head without the (B, S, V) logits: gather
+                            # supervised positions, then chunked-vocab CE
 )
 
 

@@ -87,3 +87,22 @@ def flash_attention_ref(
         s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)
+
+
+def fused_ce_ref(
+    h: jnp.ndarray,        # (N, D)
+    w: jnp.ndarray,        # (V, D)
+    labels: jnp.ndarray,   # (N,) int in [0, V)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense oracle for ``kernels.fused_ce``: full (N, V) fp32 logits.
+
+    Returns per-row ``(nll, correct)`` — the allclose target for both the
+    chunked outputs and their ``jax.grad`` cotangents (w.r.t. h and w).
+    """
+    logits = jnp.einsum(
+        "nd,vd->nv", h.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return lse - ll, correct

@@ -3,7 +3,12 @@
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
         --steps 100 --batch 16 --seq 128 --optimizer lamb [--smoke] \
         [--mixed-batch] [--checkpoint-dir ckpt/] [--mesh data=8,model=1] \
-        [--accum-steps 4] [--precision bf16] [--fused-lamb]
+        [--accum-steps 4] [--precision bf16] [--fused-lamb] [--fused-ce]
+
+``--fused-ce`` (default on for bert-large) runs the MLM head fused:
+supervised positions are gathered before the vocab projection and the CE
+streams over vocab chunks, so the ``(B, S, V)`` logits tensor never
+exists (``--no-fused-ce`` restores the dense head).
 
 ``--batch`` is the *global* batch; ``--accum-steps k`` runs it as k
 sequential microbatches of ``batch/k`` (activation memory scales with the
@@ -64,6 +69,13 @@ def main() -> None:
                          "on TPU, chunked XLA elsewhere)")
     ap.add_argument("--no-flash", dest="flash", action="store_false",
                     help="force the dense attention path")
+    ap.add_argument("--fused-ce", dest="fused_ce", action="store_true",
+                    default=None,
+                    help="force the fused MLM head on (supervised-position "
+                         "gather + chunked-vocab CE; no (B,S,V) logits — "
+                         "default on for bert-large)")
+    ap.add_argument("--no-fused-ce", dest="fused_ce", action="store_false",
+                    help="force the dense logits + log_softmax head")
     ap.add_argument("--log-trust-ratios", action="store_true",
                     help="per-step trust-ratio min/mean/max in history")
     ap.add_argument("--checkpoint-dir", default="")
@@ -84,13 +96,16 @@ def main() -> None:
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.flash is not None:
         cfg = cfg.replace(use_flash_kernel=args.flash)
+    if args.fused_ce is not None:
+        cfg = cfg.replace(use_fused_ce_head=args.fused_ce)
     model = build_model(cfg)
     print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M "
           f"active={model.active_param_count()/1e6:.1f}M")
     print(f"global_batch={args.batch} "
           f"microbatch={args.batch // args.accum_steps} "
           f"accum={args.accum_steps} precision={args.precision} "
-          f"fused_lamb={args.fused_lamb} flash={cfg.use_flash_kernel}")
+          f"fused_lamb={args.fused_lamb} flash={cfg.use_flash_kernel} "
+          f"fused_ce={cfg.use_fused_ce_head}")
 
     mesh = None
     if args.mesh:

@@ -3,6 +3,8 @@
 ``build_model(cfg)`` returns a :class:`Model` exposing:
   defs / init / abstract_params       — parameter trees
   apply(params, batch)                — logits for train/encoder forward
+                                        (hidden states with return_hidden=
+                                        True — the fused-CE head path)
   prefill(params, batch, cache)       — logits + populated cache
   decode(params, batch, cache)        — one-token step
   make_cache(batch, len, abstract=)   — per-family cache pytree
@@ -64,6 +66,11 @@ class Model:
         the forward so matmuls/activations run in low precision while the
         caller keeps fp32 masters; gradients taken through this cast come
         back in the master dtype (the mixed-precision policy's forward half).
+
+        ``return_hidden=True`` (transformer families only) returns the
+        post-final-norm hidden states ``(B, S, D)`` instead of logits — the
+        fused-CE head path, where the loss gathers supervised positions and
+        projects only those to the vocab (``kernels/fused_ce.py``).
         """
         if compute_dtype is not None:
             params = nn.cast_tree(params, jnp.dtype(compute_dtype))

@@ -198,8 +198,15 @@ def forward(
     decode: bool = False,
     positions: Optional[jnp.ndarray] = None,
     window="cfg",
+    return_hidden: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[dict], Dict[str, jnp.ndarray]]:
-    """Returns (logits, new_caches, aux)."""
+    """Returns (logits, new_caches, aux).
+
+    ``return_hidden=True`` skips the unembed projection and returns the
+    post-final-norm hidden states ``(B, S, D)`` in the logits slot — the
+    fused-CE head path, where the vocab projection runs only over gathered
+    supervised positions (see train/loss.py and kernels/fused_ce.py).
+    """
     dtype = jnp.dtype(cfg.activation_dtype)
     x = _embed_inputs(params, batch, cfg, dtype)
     b, s = x.shape[:2]
@@ -234,6 +241,9 @@ def forward(
 
     if cfg.use_mtp and not decode:
         aux["mtp_hidden"] = x  # consumed by the MTP head in the loss
+
+    if return_hidden:
+        return x, (new_caches if caches else None), aux
 
     if cfg.tie_embeddings:
         logits = tied_unembed(x, params["embed"])

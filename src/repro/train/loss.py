@@ -1,12 +1,26 @@
-"""Loss functions: causal LM, masked prediction (HuBERT), MoE aux, MTP."""
+"""Loss functions: causal LM, masked prediction (HuBERT), MoE aux, MTP.
+
+Two head paths share every loss:
+
+  * **dense** — the model returns ``(B, S, V)`` logits and
+    :func:`cross_entropy` takes an fp32 ``log_softmax`` over them;
+  * **fused** (``cfg.use_fused_ce_head``) — the model returns final hidden
+    states, :func:`gather_supervised` packs the ``labels >= 0`` positions
+    into a fixed-size ``(B, P, D)`` buffer *before* the vocab projection,
+    and ``kernels.fused_ce`` streams vocab chunks through projection +
+    online log-sum-exp so the logits tensor never exists (see
+    docs/kernels.md).  MLM supervises ~15% of positions, so this cuts the
+    LM-head FLOPs and activations ~6.7×.
+"""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import fused_ce
 
 IGNORE = -1  # label value for unsupervised positions
 
@@ -29,6 +43,144 @@ def cross_entropy(
     return loss, acc
 
 
+# ---------------------------------------------------------------------------
+# fused head: gather supervised positions, then chunked-vocab CE
+# ---------------------------------------------------------------------------
+
+def mlm_buffer_size(cfg: ModelConfig, seq_len: int) -> int:
+    """The fused head's gather-buffer size P (static for jit).
+
+    Delegates to :meth:`ModelConfig.mlm_buffer_size` — the same bound the
+    synthetic MLM pipeline caps per-row target counts at, so data and loss
+    can never disagree about P.  Unmasked objectives (``mask_ratio == 0``:
+    causal LM, prefix-LM) supervise every position, so P = S and the gather
+    degenerates to the identity permutation.
+    """
+    return cfg.mlm_buffer_size(seq_len)
+
+
+def gather_supervised(
+    hidden: jnp.ndarray,   # (B, S, D)
+    labels: jnp.ndarray,   # (B, S) with IGNORE marking unsupervised positions
+    p: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pack the ``labels >= 0`` positions into a fixed-size (B, P, ...) buffer.
+
+    Returns ``(hidden_sel (B,P,D), labels_sel (B,P), valid (B,P) bool,
+    count (B,))`` — supervised positions first (stable order), pad slots
+    marked invalid.  Static shapes: P is a Python int, so the result is
+    jit-friendly regardless of how many positions each example supervises.
+    Overflow (``count > p``) is NOT truncated here; callers must check
+    ``count`` (see :func:`fused_cross_entropy`).
+    """
+    b, s = labels.shape
+    mask = labels >= 0
+    count = jnp.sum(mask.astype(jnp.int32), axis=-1)
+    # stable argsort of the inverted mask puts supervised positions first,
+    # in their original order
+    order = jnp.argsort(jnp.logical_not(mask), axis=-1, stable=True)
+    idx = order[:, :p]
+    hidden_sel = jnp.take_along_axis(hidden, idx[..., None], axis=1)
+    labels_sel = jnp.take_along_axis(labels, idx, axis=1)
+    valid = jax.lax.broadcasted_iota(jnp.int32, (b, p), 1) < count[:, None]
+    return hidden_sel, jnp.where(valid, labels_sel, IGNORE), valid, count
+
+
+def fused_cross_entropy(
+    hidden: jnp.ndarray,   # (B, S, D) final hidden states
+    labels: jnp.ndarray,   # (B, S) with IGNORE
+    w: jnp.ndarray,        # (V, D) vocab projection (embedding layout)
+    *,
+    max_positions: int,
+    backend: str = "auto",
+    block_v: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-head (loss, accuracy): gather → chunked-vocab CE, no logits.
+
+    Semantics match :func:`cross_entropy` on the same labels (token-mean
+    over ``labels >= 0``; zero supervision → loss 0, acc 0, zero grads).
+
+    A sequence with more than ``max_positions`` supervised positions cannot
+    be represented in the fixed gather buffer.  Called eagerly (concrete
+    labels) this raises a ValueError; under jit the loss is poisoned to NaN
+    — never a silent truncation.
+    """
+    b, s, d = hidden.shape
+    p = max(1, min(max_positions, s))
+    if not isinstance(labels, jax.core.Tracer):
+        mx = int(jnp.max(jnp.sum((labels >= 0).astype(jnp.int32), axis=-1)))
+        if mx > p:
+            raise ValueError(
+                f"a sequence supervises {mx} positions but the fused-CE "
+                f"gather buffer holds P={p}; raise "
+                f"ModelConfig.mlm_max_predictions (or cap masking in the "
+                f"data pipeline) — refusing to silently truncate"
+            )
+    hidden_sel, labels_sel, valid, count = gather_supervised(hidden, labels, p)
+    nll, correct = fused_ce(
+        hidden_sel.reshape(b * p, d), w, labels_sel.reshape(b * p),
+        backend=backend, block_v=block_v,
+    )
+    wrow = valid.reshape(b * p).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(wrow), 1.0)
+    loss = jnp.sum(nll * wrow) / denom
+    acc = jnp.sum(correct * wrow) / denom
+    # under jit the eager check above never ran: poison instead of
+    # truncating.  Multiplicative so the NaN propagates through the
+    # *backward* too (a where-select would zero the taken branch's
+    # cotangent, silently dropping the CE gradients on overflow)
+    poison = jnp.where(jnp.any(count > p), jnp.float32(jnp.nan),
+                       jnp.float32(1.0))
+    return loss * poison, acc * poison
+
+
+def head_weights(params, cfg: ModelConfig) -> jnp.ndarray:
+    """The vocab projection in (V, D) embedding layout for the fused head."""
+    if cfg.tie_embeddings:
+        return params["embed"]
+    return params["unembed"].T
+
+
+def check_fused_ce_supported(cfg: ModelConfig) -> None:
+    """Clear error for configs the fused head cannot express."""
+    if cfg.family in ("hybrid", "ssm"):
+        raise ValueError(
+            f"use_fused_ce_head is not supported for family {cfg.family!r} "
+            "(the hidden-states forward path is transformer-only)"
+        )
+    if cfg.logit_softcap:
+        raise ValueError(
+            "use_fused_ce_head cannot apply logit_softcap (the fused CE "
+            "streams raw projections); disable one of the two"
+        )
+    if cfg.frontend == "audio_stub" and cfg.mlm_max_predictions is None:
+        raise ValueError(
+            "use_fused_ce_head with audio_stub needs an explicit "
+            "ModelConfig.mlm_max_predictions: Bernoulli span masks are not "
+            "bounded by ceil(mask_ratio * seq) (that is their mean), so the "
+            "default gather buffer would overflow on most batches"
+        )
+
+
+def _masked_ce(
+    logits: Optional[jnp.ndarray],
+    hidden: Optional[jnp.ndarray],
+    labels: jnp.ndarray,
+    cfg: ModelConfig,
+    params,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense or fused CE over ``labels >= 0`` — one switch for every loss."""
+    if hidden is None:
+        return cross_entropy(logits, labels)
+    if params is None:
+        raise ValueError("the fused CE head needs params (vocab projection)")
+    return fused_cross_entropy(
+        hidden, labels, head_weights(params, cfg),
+        max_positions=mlm_buffer_size(cfg, labels.shape[-1]),
+        backend=cfg.fused_ce_backend,
+    )
+
+
 def supervised_token_count(labels: jnp.ndarray) -> jnp.ndarray:
     """Number of positions contributing to the CE denominator (label >= 0).
 
@@ -40,21 +192,25 @@ def supervised_token_count(labels: jnp.ndarray) -> jnp.ndarray:
 
 
 def lm_loss(
-    logits: jnp.ndarray,
+    logits: Optional[jnp.ndarray],
     batch: Dict[str, jnp.ndarray],
     aux: Dict[str, jnp.ndarray],
     cfg: ModelConfig,
     *,
     params=None,
+    hidden: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Next-token CE + MoE aux losses (+ optional MTP head loss).
 
     ``batch["labels"]`` is aligned with logits positions (label[t] is the
-    target for position t); IGNORE(-1) marks unsupervised positions.
+    target for position t); IGNORE(-1) marks unsupervised positions.  With
+    ``hidden`` given (fused head), the main CE runs gather + chunked-vocab
+    CE on the final hidden states instead of dense logits; the MTP branch
+    keeps its own (dense) head either way.
     """
     labels = batch["labels"]
-    mtp_hidden = aux.pop("mtp_hidden", None)
-    ce, acc = cross_entropy(logits, labels)
+    mtp_hidden = aux.get("mtp_hidden")
+    ce, acc = _masked_ce(logits, hidden, labels, cfg, params)
     total = ce
     metrics = {"loss/ce": ce, "accuracy": acc}
 
@@ -85,16 +241,22 @@ def lm_loss(
 
 
 def masked_prediction_loss(
-    logits: jnp.ndarray,
+    logits: Optional[jnp.ndarray],
     batch: Dict[str, jnp.ndarray],
     aux: Dict[str, jnp.ndarray],
     cfg: ModelConfig,
     *,
     params=None,
+    hidden: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """HuBERT-style: CE on masked frames only (targets = cluster ids)."""
+    """HuBERT-style: CE on masked frames only (targets = cluster ids).
+
+    The fused path (``hidden``) needs ``cfg.mlm_max_predictions`` sized for
+    the masking distribution: HuBERT span masks are Bernoulli, so their
+    per-row count is not bounded by ``ceil(mask_ratio · S)``.
+    """
     labels = jnp.where(batch["mask"], batch["labels"], IGNORE)
-    ce, acc = cross_entropy(logits, labels)
+    ce, acc = _masked_ce(logits, hidden, labels, cfg, params)
     return ce, {
         "loss/ce": ce, "accuracy": acc, "loss/total": ce,
         "tokens/supervised": supervised_token_count(labels),

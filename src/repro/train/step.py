@@ -15,6 +15,10 @@
     ``scale_by_adam → trust-ratio → -lr`` transform chain (≈21 N optimizer
     traffic) for the fused per-leaf update (Pallas kernel on TPU, single
     fused XLA expression elsewhere; ≈10 N), parity-checked per layer.
+  * **fused MLM head** — ``cfg.use_fused_ce_head`` (default on for
+    bert-large) makes the loss gather supervised positions before the vocab
+    projection and stream the CE over vocab chunks, so no ``(B, S, V)``
+    logits tensor is ever materialized (see ``make_loss_fn`` / train/loss).
 
 ``make_optimizer`` wires the model's pytree metadata (weight-decay mask,
 trust-ratio mask, stacked-layer axes) into the paper's optimizers so that
@@ -36,7 +40,7 @@ from repro.kernels import (
     resolve_fused_backend,
 )
 from repro.models.api import Model
-from repro.train.loss import loss_for
+from repro.train.loss import check_fused_ce_supported, loss_for
 
 # Metric key carrying each microbatch's supervised-token count (set by the
 # loss functions); drives token-weighted accumulation below.
@@ -117,7 +121,12 @@ def make_optimizer(
     raise ValueError(f"unknown optimizer {name!r}")
 
 
-def make_loss_fn(model: Model, compute_dtype: Optional[str] = None) -> Callable:
+def make_loss_fn(
+    model: Model,
+    compute_dtype: Optional[str] = None,
+    *,
+    use_fused_ce: Optional[bool] = None,
+) -> Callable:
     """loss_fn(params, batch) -> (loss, metrics) for this model's family.
 
     ``compute_dtype`` (e.g. ``"bfloat16"``) casts params inside the loss so
@@ -126,12 +135,30 @@ def make_loss_fn(model: Model, compute_dtype: Optional[str] = None) -> Callable:
     (The train step instead casts once *outside* the accumulation scan and
     passes ``compute_dtype=None`` here, amortizing the cast over microbatches;
     the gradients w.r.t. the cast copy are identical either way.)
+
+    ``use_fused_ce`` overrides ``cfg.use_fused_ce_head``: when on, the model
+    returns final hidden states instead of ``(B, S, V)`` logits and the loss
+    runs the fused MLM head — gather supervised positions, then chunked-vocab
+    CE (``kernels/fused_ce.py``) — so the logits tensor never exists.
     """
-    loss_impl = loss_for(model.cfg)
+    cfg = model.cfg
+    fused_ce_head = cfg.use_fused_ce_head if use_fused_ce is None else use_fused_ce
+    if fused_ce_head:
+        check_fused_ce_supported(cfg)
+    loss_impl = loss_for(cfg)
 
     def loss_fn(params, batch):
+        if fused_ce_head:
+            # cast once here (not inside apply) so the loss's vocab
+            # projection sees the same compute-dtype copy the forward ran
+            # on — otherwise the mixed-precision policy would silently not
+            # apply to the fused head's matmuls
+            if compute_dtype is not None:
+                params = nn.cast_tree(params, jnp.dtype(compute_dtype))
+            hidden, aux = model.apply(params, batch, return_hidden=True)
+            return loss_impl(None, batch, aux, cfg, params=params, hidden=hidden)
         logits, aux = model.apply(params, batch, compute_dtype=compute_dtype)
-        return loss_impl(logits, batch, aux, model.cfg, params=params)
+        return loss_impl(logits, batch, aux, cfg, params=params)
 
     return loss_fn
 

@@ -12,7 +12,8 @@ Prints one JSON object on the last stdout line.  Scenarios:
   equiv        sharded step ≡ single-device step (unfused / fused /
                accum2+bf16, on data=8 and data=4,model=2 meshes)
   mlm_flash    the paper path: bert-smoke MLM through flash attention,
-               fused LAMB, sharded ≡ single-device
+               fused LAMB and the fused-CE head (plus the dense-head
+               variant), sharded ≡ single-device
   stages       mixed-batch fit_stages re-jits correctly on a mesh
   checkpoint   FSDP state saved on data=8 restores onto data=4,model=2
                (values, placements, and a post-restore step)
@@ -107,9 +108,16 @@ def scenario_equiv():
 
 
 def scenario_mlm_flash():
-    cfg = smoke_config("bert-large")  # MLM + use_flash_kernel=True
+    # MLM through flash attention; the smoke config inherits bert-large's
+    # use_flash_kernel=True AND use_fused_ce_head=True, so "fused_ce" is the
+    # full paper path (gather + chunked-vocab CE head, no (B,S,V) logits)
+    # and "dense_head" isolates the head swap on the same sharded step
+    cfg = smoke_config("bert-large")
     tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
-    return _equiv_entry(cfg, tc)
+    return {
+        "fused_ce": _equiv_entry(cfg, tc),
+        "dense_head": _equiv_entry(cfg.replace(use_fused_ce_head=False), tc),
+    }
 
 
 def scenario_stages():

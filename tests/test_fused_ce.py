@@ -1,0 +1,401 @@
+"""Fused MLM head: chunked-vocab CE kernel + gather vs the dense oracle.
+
+Three altitudes, mirroring the flash-attention suite:
+
+  * kernel — ``kernels.fused_ce`` (interpret + xla backends) vs the dense
+    ``fused_ce_ref`` oracle, values and ``jax.grad`` cotangents;
+  * loss — ``fused_cross_entropy`` (gather + kernel) vs ``cross_entropy``
+    on dense logits, including degenerate supervision (all-IGNORE, overflow);
+  * model — ``make_loss_fn(use_fused_ce=True)`` vs the dense head through a
+    real bert-family model: loss, accuracy and full param/embedding grads,
+    across {fp32, bf16} × {partial, full, zero supervision} × backends, and
+    one jitted end-to-end train step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data import make_batch
+from repro.data.synthetic import SyntheticLM, mlm_batch
+from repro.kernels import fused_ce
+from repro.kernels.ref import fused_ce_ref
+from repro.models import build_model
+from repro.train.loss import (
+    IGNORE,
+    check_fused_ce_supported,
+    cross_entropy,
+    fused_cross_entropy,
+    gather_supervised,
+    mlm_buffer_size,
+)
+from repro.train.step import make_loss_fn, make_train_step
+
+RNG = np.random.default_rng(7)
+
+BACKENDS = ["interpret", "xla"]
+
+
+def _rand(n, d, v, dtype=jnp.float32):
+    h = jnp.asarray(RNG.standard_normal((n, d)), dtype)
+    w = jnp.asarray(RNG.standard_normal((v, d)) * 0.3, dtype)
+    lbl = jnp.asarray(RNG.integers(0, v, n), jnp.int32)
+    return h, w, lbl
+
+
+def _mini_cfg(**kw):
+    kw.setdefault("activation_dtype", "float32")
+    kw.setdefault("vocab_size", 256)
+    return get_config("bert-large").replace(
+        name="bert-fce-mini", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel vs dense oracle
+# ---------------------------------------------------------------------------
+
+CE_SHAPES = [
+    (48, 32, 300),    # ragged rows and vocab (padding paths)
+    (17, 16, 64),     # rows < block, single vocab chunk
+    (256, 64, 1000),  # multiple row blocks
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n,d,v", CE_SHAPES)
+def test_fused_ce_matches_ref(n, d, v, backend):
+    h, w, lbl = _rand(n, d, v)
+    kw = dict(interpret=True) if backend == "interpret" else dict(backend="xla")
+    nll, correct = fused_ce(h, w, lbl, block_n=16, block_v=64, **kw)
+    nll_r, correct_r = fused_ce_ref(h, w, lbl)
+    np.testing.assert_allclose(np.asarray(nll), np.asarray(nll_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(correct), np.asarray(correct_r))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ce_grad_matches_ref(backend, dtype):
+    """jax.grad through the chunked kernel ≡ grad through dense logits,
+    with varied per-row cotangents (incl. zeros — ignored rows)."""
+    n, d, v = 48, 32, 300
+    h, w, lbl = _rand(n, d, v, dtype)
+    wts = jnp.asarray(RNG.random(n) > 0.3, jnp.float32) * jnp.asarray(
+        RNG.random(n), jnp.float32)
+    kw = dict(interpret=True) if backend == "interpret" else dict(backend="xla")
+
+    def loss(h, w):
+        nll, _ = fused_ce(h, w, lbl, block_n=16, block_v=64, **kw)
+        return jnp.sum(nll * wts)
+
+    def loss_ref(h, w):
+        nll, _ = fused_ce_ref(h, w, lbl)
+        return jnp.sum(nll * wts)
+
+    gh, gw = jax.grad(loss, (0, 1))(h, w)
+    gh_r, gw_r = jax.grad(loss_ref, (0, 1))(h, w)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gh, np.float32),
+                               np.asarray(gh_r, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(gw, np.float32),
+                               np.asarray(gw_r, np.float32), **tol)
+
+
+def test_fused_ce_shape_guards():
+    h, w, lbl = _rand(8, 16, 32)
+    with pytest.raises(ValueError, match="feature dim"):
+        fused_ce(h, jnp.zeros((32, 8)), lbl, backend="xla")
+    with pytest.raises(ValueError, match="labels shape"):
+        fused_ce(h, w, lbl[:4], backend="xla")
+    with pytest.raises(ValueError, match="conflicts"):
+        fused_ce(h, w, lbl, backend="xla", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# gather
+# ---------------------------------------------------------------------------
+
+def test_gather_supervised_packs_and_masks():
+    labels = jnp.asarray([
+        [IGNORE, 5, IGNORE, 7, IGNORE, IGNORE],
+        [IGNORE] * 6,
+        [1, 2, 3, IGNORE, IGNORE, IGNORE],
+    ], jnp.int32)
+    hidden = jnp.arange(3 * 6, dtype=jnp.float32).reshape(3, 6, 1)
+    h_sel, lbl_sel, valid, count = gather_supervised(hidden, labels, 3)
+    assert h_sel.shape == (3, 3, 1) and lbl_sel.shape == (3, 3)
+    np.testing.assert_array_equal(np.asarray(count), [2, 0, 3])
+    # supervised positions first, original order, pads marked IGNORE/invalid
+    np.testing.assert_array_equal(np.asarray(lbl_sel[0]), [5, 7, IGNORE])
+    np.testing.assert_array_equal(np.asarray(h_sel[0, :2, 0]), [1.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [[1, 1, 0], [0, 0, 0], [1, 1, 1]])
+    np.testing.assert_array_equal(np.asarray(lbl_sel[2]), [1, 2, 3])
+
+
+def test_mlm_buffer_size_defaults():
+    cfg = _mini_cfg()                       # mask_ratio = 0.15
+    assert mlm_buffer_size(cfg, 128) == 20  # ceil(0.15 * 128)
+    assert mlm_buffer_size(cfg.replace(mlm_max_predictions=8), 128) == 8
+    assert mlm_buffer_size(cfg.replace(mask_ratio=0.0), 128) == 128
+
+
+def test_mlm_batch_counts_stay_under_buffer():
+    """The synthetic pipeline guarantees the fused head's gather bound:
+    per-row target counts never exceed ceil(mask_ratio * seq), stay >= 1,
+    and still vary row to row (token-weighted accumulation relies on it)."""
+    src = SyntheticLM(512, seed=0)
+    counts = []
+    for i in range(8):
+        b = mlm_batch(src, np.random.default_rng(i), 16, 128, 0.15)
+        c = (b["labels"] >= 0).sum(axis=-1)
+        assert c.max() <= int(np.ceil(0.15 * 128))
+        assert c.min() >= 1
+        counts.extend(c.tolist())
+    assert len(set(counts)) > 1
+    b = mlm_batch(src, np.random.default_rng(0), 8, 128, 0.15,
+                  max_predictions=5)
+    assert (b["labels"] >= 0).sum(axis=-1).max() <= 5
+
+
+# ---------------------------------------------------------------------------
+# loss level: fused_cross_entropy vs dense cross_entropy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_cross_entropy_matches_dense(backend):
+    b, s, d, v = 3, 24, 16, 120
+    hidden = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((v, d)) * 0.3, jnp.float32)
+    labels = np.full((b, s), IGNORE, np.int32)
+    sel = RNG.random((b, s)) < 0.3
+    sel[:, 0] = True
+    labels[sel] = RNG.integers(0, v, (b, s))[sel]
+    labels = jnp.asarray(labels)
+
+    def dense(hidden, w):
+        return cross_entropy(jnp.einsum("bsd,vd->bsv", hidden, w), labels)
+
+    def fused(hidden, w):
+        return fused_cross_entropy(hidden, labels, w, max_positions=s,
+                                   backend=backend)
+
+    (l_f, a_f), (l_d, a_d) = fused(hidden, w), dense(hidden, w)
+    assert float(l_f) == pytest.approx(float(l_d), rel=1e-5)
+    assert float(a_f) == pytest.approx(float(a_d))
+    g_f = jax.grad(lambda *a: fused(*a)[0], (0, 1))(hidden, w)
+    g_d = jax.grad(lambda *a: dense(*a)[0], (0, 1))(hidden, w)
+    for a, bb in zip(g_f, g_d):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_cross_entropy_zero_supervision(backend):
+    """All-IGNORE batch: finite zero loss and exactly zero grads (matching
+    the dense path's max(denom, 1) convention)."""
+    b, s, d, v = 2, 16, 8, 64
+    hidden = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((v, d)), jnp.float32)
+    labels = jnp.full((b, s), IGNORE, jnp.int32)
+
+    loss, acc = fused_cross_entropy(hidden, labels, w, max_positions=4,
+                                    backend=backend)
+    assert float(loss) == 0.0 and float(acc) == 0.0
+    gh, gw = jax.grad(
+        lambda *a: fused_cross_entropy(a[0], labels, a[1], max_positions=4,
+                                       backend=backend)[0], (0, 1)
+    )(hidden, w)
+    assert float(jnp.max(jnp.abs(gh))) == 0.0
+    assert float(jnp.max(jnp.abs(gw))) == 0.0
+
+    l_d, a_d = cross_entropy(jnp.einsum("bsd,vd->bsv", hidden, w), labels)
+    assert float(l_d) == 0.0 and float(a_d) == 0.0
+
+
+def test_fused_cross_entropy_overflow_raises_eagerly():
+    b, s, d, v = 2, 16, 8, 64
+    hidden = jnp.zeros((b, s, d), jnp.float32)
+    w = jnp.zeros((v, d), jnp.float32)
+    labels = jnp.zeros((b, s), jnp.int32)   # all 16 positions supervised
+    with pytest.raises(ValueError, match="silently truncate"):
+        fused_cross_entropy(hidden, labels, w, max_positions=4)
+
+
+def test_fused_cross_entropy_overflow_poisons_under_jit():
+    """Inside jit the eager ValueError is unreachable: the loss AND its
+    gradients must come back NaN (loud) — never a silently-truncated finite
+    value, and never finite zero grads next to a NaN loss."""
+    b, s, d, v = 2, 16, 8, 64
+    hidden = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((v, d)), jnp.float32)
+
+    @jax.jit
+    def f(labels, hidden, w):
+        return fused_cross_entropy(hidden, labels, w, max_positions=4)[0]
+
+    over = jnp.zeros((b, s), jnp.int32)                           # 16 > 4
+    assert np.isnan(float(f(over, hidden, w)))
+    # accuracy poisons too: it would otherwise be a finite, plausible value
+    # computed over only the first P gathered positions
+    assert np.isnan(float(jax.jit(
+        lambda l: fused_cross_entropy(hidden, l, w, max_positions=4)[1]
+    )(over)))
+    gh, gw = jax.jit(jax.grad(f, (1, 2)))(over, hidden, w)
+    assert np.isnan(np.asarray(gh)).any() and np.isnan(np.asarray(gw)).any()
+    ok = np.full((b, s), IGNORE, np.int32)
+    ok[:, :3] = 1
+    assert np.isfinite(float(f(jnp.asarray(ok), hidden, w)))      # 3 <= 4
+    gh, gw = jax.jit(jax.grad(f, (1, 2)))(jnp.asarray(ok), hidden, w)
+    assert np.isfinite(np.asarray(gh)).all() and np.isfinite(np.asarray(gw)).all()
+
+
+def test_fused_ce_unsupported_configs_raise():
+    cfg = _mini_cfg()
+    with pytest.raises(ValueError, match="logit_softcap"):
+        check_fused_ce_supported(cfg.replace(logit_softcap=30.0))
+    with pytest.raises(ValueError, match="family"):
+        check_fused_ce_supported(cfg.replace(family="hybrid"))
+    model = build_model(cfg.replace(logit_softcap=30.0))
+    with pytest.raises(ValueError, match="logit_softcap"):
+        make_loss_fn(model, use_fused_ce=True)
+    # Bernoulli span masks (hubert) are not bounded by ceil(mask_ratio*S):
+    # the fused head demands an explicit buffer size there
+    audio = cfg.replace(frontend="audio_stub", mask_ratio=0.08)
+    with pytest.raises(ValueError, match="mlm_max_predictions"):
+        check_fused_ce_supported(audio)
+    check_fused_ce_supported(audio.replace(mlm_max_predictions=32))
+
+
+def test_make_batch_cap_tracks_fused_buffer():
+    """make_batch floors the masking rate at 0.15, but its cap must come
+    from the same mlm_buffer_size the fused head uses — a config with
+    0 < mask_ratio < 0.15 must still never exceed the gather buffer."""
+    cfg = _mini_cfg(mask_ratio=0.10)
+    s = 128
+    buf = cfg.mlm_buffer_size(s)
+    assert buf == 13   # ceil(0.10 * 128), not ceil(0.15 * 128)
+    for i in range(4):
+        b = make_batch(cfg, np.random.default_rng(i), 16, s)
+        assert (b["labels"] >= 0).sum(axis=-1).max() <= buf
+
+
+# ---------------------------------------------------------------------------
+# model level: fused head ≡ dense head through a real bert-family model
+# ---------------------------------------------------------------------------
+
+def _batch_for(cfg, supervision, b=4, s=32):
+    if supervision == "partial":
+        return make_batch(cfg, np.random.default_rng(0), b, s), cfg
+    src = SyntheticLM(cfg.vocab_size, seed=0)
+    toks = src.tokens(np.random.default_rng(1), b, s)
+    if supervision == "full":
+        # every position supervised: the buffer must be widened to S
+        return {"tokens": toks, "labels": toks.copy()}, cfg.replace(
+            mlm_max_predictions=s)
+    labels = np.full((b, s), IGNORE, np.int32)
+    return {"tokens": toks, "labels": labels}, cfg
+
+
+@pytest.mark.parametrize("supervision", ["partial", "full", "zero"])
+@pytest.mark.parametrize("act_dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_head_matches_dense_model(supervision, act_dtype, backend):
+    """loss / accuracy / full param + embedding grads: fused ≡ dense."""
+    cfg = _mini_cfg(activation_dtype=act_dtype, fused_ce_backend=backend)
+    raw, cfg = _batch_for(cfg, supervision)
+    batch = jax.tree.map(jnp.asarray, raw)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    out = {}
+    for fused in (True, False):
+        loss_fn = make_loss_fn(model, use_fused_ce=fused)
+        (loss, metrics), grads = jax.jit(
+            jax.value_and_grad(loss_fn, has_aux=True)
+        )(params, batch)
+        out[fused] = (float(loss), float(metrics["accuracy"]), grads)
+
+    l_f, a_f, g_f = out[True]
+    l_d, a_d, g_d = out[False]
+    assert np.isfinite(l_f) and np.isfinite(l_d)
+    bf16 = act_dtype == "bfloat16"
+    assert l_f == pytest.approx(l_d, rel=2e-2 if bf16 else 1e-5, abs=1e-6)
+    # bf16 rounds the dense logits before its fp32 softmax while the fused
+    # path keeps the fp32 product — near-tie argmaxes may flip a position
+    assert a_f == pytest.approx(a_d, abs=0.1 if bf16 else 1e-6)
+    tol = dict(rtol=5e-2, atol=3e-2) if bf16 else dict(rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(g_f), jax.tree.leaves(g_d)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **tol)
+    if supervision == "zero":
+        assert l_f == 0.0
+        for a in jax.tree.leaves(g_f):
+            assert float(jnp.max(jnp.abs(a))) == 0.0
+
+
+def test_fused_head_respects_compute_dtype_cast():
+    """make_loss_fn(compute_dtype=...) must cast the vocab projection the
+    fused head uses, not just the forward — fused ≡ dense under the same
+    bf16 policy (both heads projecting the bf16-cast table)."""
+    cfg = _mini_cfg()
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(cfg, np.random.default_rng(0), 4, 32)
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    losses = {}
+    for fused in (True, False):
+        loss_fn = make_loss_fn(model, "bfloat16", use_fused_ce=fused)
+        losses[fused] = float(loss_fn(params, batch)[0])
+    assert losses[True] == pytest.approx(losses[False], rel=2e-2)
+
+
+def test_train_step_fused_ce_equals_dense():
+    """End-to-end: one jitted train step with the fused head reproduces the
+    dense head's loss, metrics and updated params (CPU: XLA CE backend)."""
+    base = _mini_cfg()
+    batch = jax.tree.map(
+        jnp.asarray, make_batch(base, np.random.default_rng(0), 4, 64)
+    )
+    key = jax.random.key(0)
+    states, metrics = [], []
+    for fused in (True, False):
+        cfg = base.replace(use_fused_ce_head=fused)
+        model = build_model(cfg)
+        tc = TrainConfig(optimizer="lamb", grad_clip_norm=None)
+        init_fn, step_fn = make_train_step(model, tc)
+        st, m = jax.jit(step_fn)(init_fn(key), batch)
+        states.append(st)
+        metrics.append(m)
+    assert float(metrics[0]["loss/total"]) == pytest.approx(
+        float(metrics[1]["loss/total"]), rel=1e-5)
+    assert float(metrics[0]["accuracy"]) == pytest.approx(
+        float(metrics[1]["accuracy"]))
+    assert float(metrics[0]["grad_norm"]) == pytest.approx(
+        float(metrics[1]["grad_norm"]), rel=1e-4)
+    for a, b in zip(jax.tree.leaves(states[0].params),
+                    jax.tree.leaves(states[1].params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_fused_head_compiled_without_logits_tensor():
+    """The jitted fused loss must contain no (B, S, V) tensor of any dtype
+    (the benchmark asserts the same on the full train step's HLO)."""
+    cfg = _mini_cfg(vocab_size=3001)   # unique dim: unambiguous in HLO text
+    raw, cfg = _batch_for(cfg, "partial")
+    batch = jax.tree.map(jnp.asarray, raw)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    b, s = batch["labels"].shape
+    for fused, expect in ((True, False), (False, True)):
+        loss_fn = make_loss_fn(model, use_fused_ce=fused)
+        text = jax.jit(loss_fn).lower(params, batch).compile().as_text()
+        assert (f"[{b},{s},{cfg.vocab_size}]" in text) is expect, (
+            f"fused={fused}: unexpected (B,S,V) presence")

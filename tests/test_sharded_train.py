@@ -48,10 +48,13 @@ def test_sharded_step_matches_single_device(report, variant, mesh):
     assert entry["loss_diff"] < LOSS_TOL, entry
 
 
+@pytest.mark.parametrize("head", ["fused_ce", "dense_head"])
 @pytest.mark.parametrize("mesh", ["data=8,model=1", "data=4,model=2"])
-def test_mlm_flash_fused_sharded_matches(report, mesh):
-    """The paper path: bert MLM through flash attention + fused LAMB."""
-    entry = report["mlm_flash"][mesh]
+def test_mlm_flash_fused_sharded_matches(report, head, mesh):
+    """The paper path: bert MLM through flash attention + fused LAMB, with
+    both the fused-CE head (gather + chunked-vocab CE — vocab-chunk
+    reductions must stay global under GSPMD) and the dense logits head."""
+    entry = report["mlm_flash"][head][mesh]
     assert entry["param_maxdiff"] < PARAM_TOL, entry
     assert entry["loss_diff"] < LOSS_TOL, entry
 
