@@ -31,10 +31,10 @@ from repro.kernels.ops import flash_sdpa, resolve_flash_backend
 from repro.models.layers.attention import _mask_bias, _sdpa
 
 try:
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, provenance_header
 except ModuleNotFoundError:  # run as a script: `python benchmarks/attention_bench.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, provenance_header
 
 OUT_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_attention.json"
 
@@ -126,7 +126,8 @@ def run(full: bool = False) -> List[str]:
         for r in claim
     )
     OUT_JSON.write_text(json.dumps(
-        {"results": results, "claim_s": CLAIM_S, "holds": holds}, indent=2))
+        {"provenance": provenance_header(time.time()),
+         "results": results, "claim_s": CLAIM_S, "holds": holds}, indent=2))
     rows.append(csv_row(
         "attention/flash_beats_dense_fwd_bwd", 0.0,
         f"s>={CLAIM_S};holds={int(holds)}"))

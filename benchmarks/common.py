@@ -23,7 +23,15 @@ from repro.configs.base import TrainConfig
 from repro.data import make_batch
 from repro.data.synthetic import SyntheticLM
 from repro.models import build_model
+from repro.telemetry import run_provenance
 from repro.train import Trainer
+
+
+def provenance_header(timestamp: float, *, mesh=None) -> Dict:
+    """The shared header every ``BENCH_*.json`` carries: git sha, caller's
+    timestamp, jax/jaxlib versions, device kind, and the mesh spec — so two
+    bench blobs are comparable only when their environments are."""
+    return run_provenance(timestamp=timestamp, mesh=mesh)
 
 
 def bert_cpu(seq_len: int = 64, vocab: int = 1024):

@@ -3,6 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [--only table1,table4] [--fast]
 
 Prints ``name,us_per_call,derived`` CSV rows (claims carry a ``holds=`` flag).
+The sweep also feeds an in-memory event log (one ``bench_result`` event per
+suite) and folds it — together with every ``BENCH_*.json`` the suites wrote —
+into a unified ``RUN_REPORT.json`` at the repo root.
 """
 from __future__ import annotations
 
@@ -16,6 +19,8 @@ if importlib.util.find_spec("benchmarks") is None:
     # run as a script (`python benchmarks/run.py`): put the repo root on the
     # path so the `benchmarks.*` suite imports below resolve
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 SUITES = [
     ("table4", "benchmarks.table4_recipe_values", "Tables 4-5 recipe values (exact)"),
@@ -43,6 +48,11 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    from repro.telemetry import EventLog, RunReport, run_provenance
+
+    log = EventLog.memory()
+    log.emit("run_start", mode="bench", provenance=run_provenance())
+
     print("name,us_per_call,derived")
     failures = 0
     for key, module, desc in SUITES:
@@ -53,12 +63,24 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(module, fromlist=["run"])
-            for row in mod.run():
+            rows = list(mod.run())
+            for row in rows:
                 print(row, flush=True)
+            log.emit("bench_result", name=key, desc=desc, ok=True,
+                     rows=len(rows), wall_s=time.perf_counter() - t0)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{key}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            log.emit("bench_result", name=key, desc=desc, ok=False,
+                     error=f"{type(e).__name__}: {e}",
+                     wall_s=time.perf_counter() - t0)
         print(f"# {key}: {desc} [{time.perf_counter()-t0:.1f}s]", file=sys.stderr)
+
+    log.emit("run_end", status="fail" if failures else "ok",
+             failures=failures)
+    report_path = ROOT / "RUN_REPORT.json"
+    RunReport.from_events(log, bench_dir=ROOT).write(report_path)
+    print(f"# report: {report_path}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -90,10 +90,10 @@ def _child() -> dict:
 
 def run() -> List[str]:
     try:
-        from benchmarks.common import csv_row
+        from benchmarks.common import csv_row, provenance_header
     except ModuleNotFoundError:  # run as a script
         sys.path.insert(0, str(ROOT))
-        from benchmarks.common import csv_row
+        from benchmarks.common import csv_row, provenance_header
 
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -106,6 +106,9 @@ def run() -> List[str]:
     if proc.returncode != 0:
         raise RuntimeError(f"sharding_bench child failed:\n{proc.stderr[-2000:]}")
     report = json.loads(proc.stdout.splitlines()[-1])
+    # the header describes the *parent* environment; the child's virtual
+    # 8-device mesh is already recorded in the per-mesh results
+    report = {"provenance": provenance_header(time.time()), **report}
     OUT_JSON.write_text(json.dumps(report, indent=2))
 
     rows = []

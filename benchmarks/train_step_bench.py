@@ -38,10 +38,10 @@ from repro.models import build_model
 from repro.train.step import make_train_step
 
 try:
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, provenance_header
 except ModuleNotFoundError:  # run as a script
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
-    from benchmarks.common import csv_row
+    from benchmarks.common import csv_row, provenance_header
 
 OUT_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_train_step.json"
 
@@ -144,7 +144,8 @@ def run(full: bool = False) -> List[str]:
         for r in claim
     )
     OUT_JSON.write_text(json.dumps(
-        {"results": results, "claim_s": CLAIM_S, "holds": holds}, indent=2))
+        {"provenance": provenance_header(time.time()),
+         "results": results, "claim_s": CLAIM_S, "holds": holds}, indent=2))
     rows.append(csv_row(
         "train_step/fused_ce_beats_dense", 0.0,
         f"s>={CLAIM_S};holds={int(holds)}"))

@@ -38,6 +38,10 @@ fi
 # continuous-batching serving smoke: tiny workload, must stream and drain
 python examples/serve_continuous.py --requests 4 --slots 2 --arrival-rate 50
 
+# telemetry gate: 20-step tiny-BERT fit with the event log on, RUN_REPORT
+# compared against the committed baseline (schema + presence, not timing)
+python scripts/telemetry_gate.py
+
 # docs: internal links + doctest-marked code fences in README.md and docs/
 # (also run standalone by the ci.yml `docs` job for fast-fail signal; here it
 # keeps this script the complete local gate)

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""CI telemetry gate: a 20-step tiny-BERT run with telemetry on, regression-
+gated against the committed baseline report.
+
+    PYTHONPATH=src python scripts/telemetry_gate.py            # gate
+    PYTHONPATH=src python scripts/telemetry_gate.py --write-baseline
+
+Runs ``repro.launch.train --smoke --telemetry-dir`` in a subprocess, then
+``RunReport.compare`` against ``scripts/baselines/run_report_baseline.json``.
+The tolerances are deliberately loose — this gates the telemetry *schema*
+(sections present, counts exact, provenance populated), not machine speed:
+timing keys are presence-only and the loss tolerance absorbs cross-platform
+float drift.  ``--write-baseline`` refreshes the committed baseline after an
+intentional schema change.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "scripts" / "baselines" / "run_report_baseline.json"
+
+# schema + presence, not timing: exact where the run is deterministic by
+# construction (step counts), loose on the loss, presence-only on anything
+# machine- or checkout-dependent
+TOLERANCES = {
+    "schema_version": 0.0,
+    "train.steps": 0.0,
+    "train.logged_steps": 0.0,
+    "train.examples_seen": 0.0,
+    "train.final.loss/total": 0.25,
+    "train.wall_s": None,
+    "spans.step.count": 0.0,
+    "spans.step.mean_s": None,
+    "trust_ratios.steps_recorded": 0.0,
+    "trust_ratios.last_step": 0.0,
+    "trust_ratios.per_leaf.embed.mean": None,
+    "events.count": 0.0,
+    "events.types.run_start": 0.0,
+    "events.types.step": 0.0,
+    "events.types.span": 0.0,
+    "events.types.trust_ratios": 0.0,
+    "events.types.run_end": 0.0,
+    "provenance.git_sha": None,
+    "provenance.jax_version": None,
+    "provenance.device_kind": None,
+    "provenance.config_hash": None,
+    "run_end.status": 0.0,
+}
+
+
+def run_tiny_fit(telemetry_dir: Path) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "bert-large", "--smoke",
+        "--steps", "20", "--batch", "8", "--seq", "32", "--log-every", "5",
+        "--fused-lamb", "--log-trust-ratios",
+        "--telemetry-dir", str(telemetry_dir),
+    ]
+    proc = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                          text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"telemetry run failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the committed baseline from this run")
+    args = ap.parse_args()
+
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.telemetry import RunReport
+
+    with tempfile.TemporaryDirectory() as d:
+        run_tiny_fit(Path(d))
+        report = RunReport.load(Path(d) / "RUN_REPORT.json")
+        events = (Path(d) / "events.jsonl").read_text()
+
+    # the JSONL really is one valid event per line
+    from repro.telemetry import validate_event
+
+    for line in events.splitlines():
+        validate_event(json.loads(line))
+
+    if args.write_baseline:
+        BASELINE.parent.mkdir(parents=True, exist_ok=True)
+        BASELINE.write_text(json.dumps(report.report, indent=2) + "\n")
+        print(f"telemetry_gate: baseline written -> {BASELINE}")
+        return 0
+
+    if not BASELINE.exists():
+        print(f"telemetry_gate: no baseline at {BASELINE}; "
+              f"run with --write-baseline first", file=sys.stderr)
+        return 2
+
+    baseline = json.loads(BASELINE.read_text())
+    result = report.compare(baseline, TOLERANCES)
+    print(result.render())
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

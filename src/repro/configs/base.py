@@ -156,6 +156,11 @@ class TrainConfig:
     fused_backend: str = "auto"    # auto | pallas | xla | interpret
     seed: int = 0
     log_trust_ratios: bool = False
+    # per-layer trust-ratio/norm recording: the step returns, under
+    # metrics["telemetry/per_layer"], pytrees of per-layer-slice vectors
+    # (trust_ratio threaded out of the fused-LAMB kernels as an aux output)
+    # — jit-compatible, no host sync until the Trainer's log-step fetch
+    record_trust_ratios: bool = False
 
     @property
     def grad_accum_steps(self) -> int:

@@ -21,7 +21,11 @@ from repro.core.strategy import (
     phi_clip,
     trust_ratio,
 )
-from repro.core.trust_ratio import summarize_trust_ratios, trust_ratio_tree
+from repro.core.trust_ratio import (
+    summarize_trust_ratios,
+    trust_ratio_tree,
+    trust_records,
+)
 
 __all__ = [
     "Stage",
@@ -46,6 +50,7 @@ __all__ = [
     "summarize_trust_ratios",
     "trust_ratio",
     "trust_ratio_tree",
+    "trust_records",
     "untuned_lamb_schedule",
     "warmup_poly_decay",
 ]

@@ -39,6 +39,47 @@ def trust_ratio_tree(
     return jax.tree.map(one, params, updates, la)
 
 
+def _normalize_axes(params, layer_axes):
+    if layer_axes is None:
+        return jax.tree.map(lambda _: -1, params)
+    return jax.tree.map(
+        lambda a: -1 if a is None else a, layer_axes,
+        is_leaf=lambda x: x is None or isinstance(x, int),
+    )
+
+
+def trust_records(
+    params,
+    updates,
+    *,
+    layer_axes=None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    trust_ratio=None,
+):
+    """Per-layer recording pytrees for the telemetry recorder.
+
+    Returns ``{"trust_ratio", "param_norm", "update_norm"}`` — three trees
+    shaped like ``params`` whose leaves are per-layer-slice vectors
+    (squeezed scalars on unstacked leaves).  ``trust_ratio`` lets the fused
+    path pass the *applied* ratio (the kernels' aux output) instead of the
+    post-hoc ``phi(||x||)/||Δx||`` recomputation used on the unfused chain.
+    All jnp, jit-compatible, no host sync.
+    """
+    la = _normalize_axes(params, layer_axes)
+    if trust_ratio is None:
+        trust_ratio = trust_ratio_tree(
+            params, updates, layer_axes=layer_axes, phi_bounds=phi_bounds
+        )
+    norm = lambda t: jax.tree.map(
+        lambda x, a: jnp.squeeze(_slice_norm(x, a)), t, la
+    )
+    return {
+        "trust_ratio": jax.tree.map(jnp.squeeze, trust_ratio),
+        "param_norm": norm(params),
+        "update_norm": norm(updates),
+    }
+
+
 def summarize_trust_ratios(tree) -> dict:
     leaves = [jnp.atleast_1d(x) for x in jax.tree.leaves(tree)]
     flat = jnp.concatenate([x.reshape(-1) for x in leaves]) if leaves else jnp.zeros((1,))

@@ -71,7 +71,7 @@ def _pad_flat(a: jnp.ndarray, layers: int, p_pad: int) -> jnp.ndarray:
     jax.jit,
     static_argnames=(
         "b1", "b2", "eps", "weight_decay", "lr", "phi_lo", "phi_hi",
-        "layer_axis", "block", "interpret", "apply_trust",
+        "layer_axis", "block", "interpret", "apply_trust", "return_ratio",
     ),
 )
 def lamb_update(
@@ -93,11 +93,15 @@ def lamb_update(
     apply_trust: bool = True,
     block: int = DEFAULT_BLOCK,
     interpret: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    return_ratio: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
     """Fused LAMB step on one tensor.  Returns (x', m', v').
 
     ``step`` is the 1-based iteration (traced scalar); betas/lr are static.
     ``layer_axis`` must be 0 or None (stacks put layers first by convention).
+    ``return_ratio=True`` appends the applied per-layer trust ratio — the
+    exact phi(‖x‖)/‖u‖ the kernel scaled by, *before* the lr fold-in — as a
+    fourth output (shape ``(layers,)``; the telemetry recorder's aux).
     """
     if layer_axis not in (None, -1, 0):
         raise ValueError("lamb_update supports layer_axis in {None, 0}")
@@ -148,6 +152,7 @@ def lamb_update(
     ratio = jnp.where(w_norm > 0, jnp.where(u_norm > 0, w_norm / u_norm, 1.0), 1.0)
     if not apply_trust:
         ratio = jnp.ones_like(ratio)
+    trust = ratio  # pre-lr applied ratio (telemetry aux)
     if lr_t is not None:
         ratio = ratio * lr_t.astype(jnp.float32)
     ratio = ratio.reshape(layers, 1)
@@ -165,8 +170,11 @@ def lamb_update(
     def unflat(a, dtype):
         return a[:, :per_layer].reshape(orig_shape).astype(dtype)
 
-    return (
+    out = (
         unflat(x_new, orig_dtype),
         unflat(m_new, jnp.float32),
         unflat(v_new, jnp.float32),
     )
+    if return_ratio:
+        out += (trust if stacked else jnp.squeeze(trust),)
+    return out

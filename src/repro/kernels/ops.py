@@ -95,8 +95,14 @@ def fused_lamb_apply(
     phi_bounds: Optional[Tuple[float, float]] = None,
     mode: str = "xla",
     param_specs: Optional[Any] = None,
-) -> Tuple[Any, Any, Any]:
+    with_aux: bool = False,
+) -> Tuple[Any, ...]:
     """One fused LAMB step over a whole pytree: (params', mu', nu').
+
+    ``with_aux=True`` appends a fourth output: a pytree shaped like
+    ``params`` of the *applied* per-layer trust ratios (each backend's
+    ``return_ratio`` aux — the telemetry recorder's source of truth, no
+    recompute from deltas).
 
     ``count`` is the 1-based step for bias correction and ``lr_t`` the traced
     learning rate; ``mode`` is a *resolved* backend ("pallas" | "xla" |
@@ -133,7 +139,7 @@ def fused_lamb_apply(
             is_leaf=lambda s: s is None or isinstance(s, PartitionSpec),
         )
 
-    xs, ms, vs = [], [], []
+    xs, ms, vs, rs = [], [], [], []
     for p, g, m, v, axis, wd_on, tr_on, spec in zip(
         p_l, g_l, m_l, v_l, la_l, wm_l, tm_l, sp_l
     ):
@@ -145,14 +151,15 @@ def fused_lamb_apply(
             # XLA expression where GSPMD keeps norm reductions global
             leaf_mode = "xla"
         if leaf_mode == "xla":
-            x2, m2, v2 = lamb_update_ref(
+            out = lamb_update_ref(
                 p, g, m, v, lr=lr_t, b1=b1, b2=b2, eps=eps,
                 weight_decay=weight_decay if wd_on else 0.0,
                 step=count, phi_bounds=phi_bounds,
                 layer_axis=axis, apply_trust=bool(tr_on),
+                return_ratio=with_aux,
             )
         else:
-            x2, m2, v2 = lamb_update(
+            out = lamb_update(
                 p, g, m, v, count, lr_t,
                 lr=1.0, b1=b1, b2=b2, eps=eps,
                 weight_decay=weight_decay if wd_on else 0.0,
@@ -160,13 +167,19 @@ def fused_lamb_apply(
                 phi_hi=None if phi_bounds is None else phi_bounds[1],
                 layer_axis=axis, apply_trust=bool(tr_on),
                 interpret=leaf_mode == "interpret",
+                return_ratio=with_aux,
             )
-        xs.append(x2)
-        ms.append(m2)
-        vs.append(v2)
+        xs.append(out[0])
+        ms.append(out[1])
+        vs.append(out[2])
+        if with_aux:
+            rs.append(out[3])
 
     unflat = jax.tree_util.tree_unflatten
-    return unflat(treedef, xs), unflat(treedef, ms), unflat(treedef, vs)
+    result = (unflat(treedef, xs), unflat(treedef, ms), unflat(treedef, vs))
+    if with_aux:
+        result += (unflat(treedef, rs),)
+    return result
 
 
 def resolve_fused_backend(backend: str = "auto") -> str:
@@ -196,6 +209,7 @@ def make_fused_lamb_step(
     grad_clip_norm: Optional[float] = None,
     mode: str = "xla",
     param_specs: Optional[Any] = None,
+    with_aux: bool = False,
 ):
     """The single stateful fused-LAMB core shared by the transform wrapper
     and the jit'd train step's direct path.
@@ -203,9 +217,11 @@ def make_fused_lamb_step(
     Returns ``step(params, grads, state) -> (new_params, new_state)``:
     clip → count/sched_count advance → lr(sched_count) → fused apply, in
     that order.  ``param_specs`` propagates the per-leaf sharded-parameter
-    fallback (see :func:`fused_lamb_apply`).  Invariant: keeping this
-    sequence in one place is what guarantees fused-direct vs transform
-    parity.
+    fallback (see :func:`fused_lamb_apply`).  With ``with_aux`` the step
+    returns ``(new_params, new_state, trust_ratios)`` — the applied
+    per-layer ratios threaded out for the telemetry recorder.  Invariant:
+    keeping this sequence in one place is what guarantees fused-direct vs
+    transform parity.
     """
 
     def step(params, grads, state: FusedLambState):
@@ -217,15 +233,18 @@ def make_fused_lamb_step(
             if callable(learning_rate)
             else jnp.asarray(learning_rate)
         )
-        new_params, new_mu, new_nu = fused_lamb_apply(
+        out = fused_lamb_apply(
             params, grads, state.mu, state.nu, count, lr_t,
             b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
             wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
             phi_bounds=phi_bounds, mode=mode, param_specs=param_specs,
+            with_aux=with_aux,
         )
-        return new_params, FusedLambState(
-            count, state.sched_count + 1, new_mu, new_nu
-        )
+        new_params, new_mu, new_nu = out[:3]
+        new_state = FusedLambState(count, state.sched_count + 1, new_mu, new_nu)
+        if with_aux:
+            return new_params, new_state, out[3]
+        return new_params, new_state
 
     return step
 

@@ -22,13 +22,16 @@ def lamb_update_ref(
     phi_bounds: Optional[Tuple[float, float]] = None,
     layer_axis: Optional[int] = None,
     apply_trust: bool = True,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    return_ratio: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
     """One LAMB step on a single tensor.  Returns (x', m', v').
 
     layer_axis: stacked-layers axis → per-slice trust ratios (scan-aware).
     ``lr`` and ``step`` may be traced scalars (schedules inside jit) — this
     is the XLA fallback backend of ``kernels.ops.fused_lamb``, not just a
-    test oracle.
+    test oracle.  ``return_ratio=True`` appends the applied per-layer trust
+    ratio (pre-lr, squeezed to a vector/scalar) — same aux contract as the
+    Pallas kernel's.
     """
     x32, g32 = x.astype(jnp.float32), g.astype(jnp.float32)
     m_new = b1 * m + (1 - b1) * g32
@@ -53,7 +56,10 @@ def lamb_update_ref(
     if not apply_trust:
         ratio = jnp.ones_like(ratio)
     x_new = x32 - lr * ratio * u
-    return x_new.astype(x.dtype), m_new, v_new
+    out = (x_new.astype(x.dtype), m_new, v_new)
+    if return_ratio:
+        out += (jnp.squeeze(ratio),)
+    return out
 
 
 def flash_attention_ref(

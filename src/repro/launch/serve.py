@@ -7,16 +7,23 @@
     # continuous batching over a slot pool with Poisson arrivals
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --continuous --slots 4 --arrival-rate 8 --requests 16
+
+``--telemetry-dir`` (continuous mode) writes a structured event log — one
+``serve_request`` event per request lifecycle (TTFT, latency, drops) plus a
+``serve_stats`` aggregate with queue-depth and slot-occupancy counters — and
+a ``RUN_REPORT.json`` rollup at exit.
 """
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import build_model
+from repro.telemetry import EventLog, RunReport, run_provenance
 from repro.serve import (
     ContinuousEngine,
     Engine,
@@ -47,6 +54,9 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None,
                     help="admission deadline in seconds (continuous mode)")
     ap.add_argument("--max-prefills-per-step", type=int, default=2)
+    ap.add_argument("--telemetry-dir", default="",
+                    help="write events.jsonl + RUN_REPORT.json here "
+                         "(continuous mode; off = null sink)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -65,10 +75,18 @@ def main() -> None:
     ]
 
     if args.continuous:
+        telemetry = (EventLog.to_dir(args.telemetry_dir)
+                     if args.telemetry_dir else EventLog())
+        if telemetry.enabled:
+            telemetry.emit("run_start", mode="serve", arch=cfg.name,
+                           n_slots=args.slots,
+                           arrival_rate=args.arrival_rate,
+                           provenance=run_provenance(configs=(cfg,)))
         eng = ContinuousEngine(
             model, params, n_slots=args.slots, max_len=max_len,
             seed=args.seed,
             scheduler=FCFSScheduler(args.max_prefills_per_step),
+            telemetry=telemetry,
         )
         reqs = [
             ServeRequest(p, max_new_tokens=args.max_new,
@@ -84,6 +102,11 @@ def main() -> None:
             print(f"req[{i}] (+{r.arrival_s:.3f}s) -> "
                   f"{np.asarray(r.out_tokens[:16])}...")
         print(f"stats: {serving_stats(out)}")
+        if telemetry.enabled:
+            telemetry.emit("run_end", status="ok")
+            report_path = Path(args.telemetry_dir) / "RUN_REPORT.json"
+            RunReport.from_events(telemetry.path).write(report_path)
+            print(f"telemetry: {telemetry.path} report: {report_path}")
         return
 
     eng = Engine(model, params, max_len=max_len, seed=args.seed)

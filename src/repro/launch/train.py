@@ -3,7 +3,16 @@
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
         --steps 100 --batch 16 --seq 128 --optimizer lamb [--smoke] \
         [--mixed-batch] [--checkpoint-dir ckpt/] [--mesh data=8,model=1] \
-        [--accum-steps 4] [--precision bf16] [--fused-lamb] [--fused-ce]
+        [--accum-steps 4] [--precision bf16] [--fused-lamb] [--fused-ce] \
+        [--telemetry-dir runs/x] [--log-trust-ratios]
+
+``--telemetry-dir`` turns on the unified telemetry subsystem: a structured
+JSONL event log (run provenance, per-interval step events, span timings,
+checkpoints) plus a ``RUN_REPORT.json`` aggregate written at exit.  Combined
+with ``--log-trust-ratios`` it also records LAMB's per-layer trust ratios
+and update/param norms each logged step (App. H-style diagnostics).  Without
+the flag every telemetry hook is a null sink — the step function and metrics
+history are bit-identical to a run without telemetry.
 
 ``--fused-ce`` (default on for bert-large) runs the MLM head fused:
 supervised positions are gathered before the vocab projection and the CE
@@ -31,6 +40,7 @@ the full configs are exercised via the dry-run (repro.launch.dryrun).
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
 
 import jax
 
@@ -41,6 +51,7 @@ from repro.core.mixed_batch import make_stage
 from repro.data import DataPipeline
 from repro.launch.mesh import make_host_mesh, make_mesh_from_spec
 from repro.models import build_model
+from repro.telemetry import EventLog, RunReport
 from repro.train import Trainer
 
 
@@ -77,7 +88,13 @@ def main() -> None:
     ap.add_argument("--no-fused-ce", dest="fused_ce", action="store_false",
                     help="force the dense logits + log_softmax head")
     ap.add_argument("--log-trust-ratios", action="store_true",
-                    help="per-step trust-ratio min/mean/max in history")
+                    help="per-step trust-ratio min/mean/max in history; with "
+                         "--telemetry-dir, also the per-layer recorder "
+                         "(trust_ratios events + histogram in the report)")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="write a structured event log (events.jsonl) and a "
+                         "RUN_REPORT.json aggregate here; off = null sink "
+                         "(zero overhead)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--mesh", default="",
@@ -124,12 +141,17 @@ def main() -> None:
             f"--batch {args.batch} must be divisible by --accum-steps "
             f"{args.accum_steps}"
         )
+    telemetry = (EventLog.to_dir(args.telemetry_dir) if args.telemetry_dir
+                 else EventLog())
     tc = TrainConfig(
         optimizer=args.optimizer, learning_rate=lr,
         weight_decay=args.weight_decay, total_steps=args.steps, seed=args.seed,
         accum_steps=args.accum_steps, precision=args.precision,
         use_fused_lamb=args.fused_lamb,
         log_trust_ratios=args.log_trust_ratios,
+        # per-layer recording costs a host transfer per logged step — only
+        # worth it when there is an event log to receive it
+        record_trust_ratios=args.log_trust_ratios and telemetry.enabled,
     )
     trainer = Trainer(
         model, tc,
@@ -139,6 +161,7 @@ def main() -> None:
         checkpoint_dir=args.checkpoint_dir or None,
         checkpoint_every=args.checkpoint_every,
         log_every=args.log_every,
+        telemetry=telemetry,
     )
 
     if args.mixed_batch:
@@ -178,6 +201,14 @@ def main() -> None:
     final = trainer.history[-1] if trainer.history else {}
     print(f"done: step={final.get('step')} loss={final.get('loss/total'):.4f} "
           f"acc={final.get('accuracy', 0.0):.4f}")
+
+    if telemetry.enabled:
+        telemetry.emit("run_end", status="ok",
+                       final_step=int(final.get("step", 0)),
+                       final_loss=float(final.get("loss/total", float("nan"))))
+        report_path = Path(args.telemetry_dir) / "RUN_REPORT.json"
+        RunReport.from_events(telemetry.path).write(report_path)
+        print(f"telemetry: {telemetry.path} report: {report_path}")
 
 
 if __name__ == "__main__":

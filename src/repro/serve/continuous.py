@@ -36,6 +36,7 @@ from repro.serve.kv_pool import KVPool, reset_inactive
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import FCFSScheduler, ServeRequest
 from repro.sharding.context import ShardCtx, use_sharding
+from repro.telemetry import EventLog
 
 TokenCallback = Callable[[ServeRequest, int], None]
 
@@ -108,6 +109,7 @@ class ContinuousEngine:
         shard_ctx: Optional[ShardCtx] = None,
         seed: int = 0,
         scheduler: Optional[FCFSScheduler] = None,
+        telemetry: Optional[EventLog] = None,
     ):
         self.model = model
         self.params = params
@@ -116,6 +118,9 @@ class ContinuousEngine:
         self.shard_ctx = shard_ctx
         self.rng = jax.random.key(seed)
         self.scheduler = scheduler or FCFSScheduler()
+        # telemetry: per-request lifecycle + per-generate aggregate counters
+        # through the unified EventLog; null sink (no-op) by default
+        self.telemetry = telemetry if telemetry is not None else EventLog()
         self.pool = KVPool(model, n_slots, max_len)
         self._prefill = jax.jit(make_pool_prefill(model, max_len))
         self._decode_sample = jax.jit(
@@ -159,6 +164,12 @@ class ContinuousEngine:
         req.finish_s = now
         self.pool.evict(slot)
         self._dev = None  # slot churn: device per-slot state is stale
+        self.telemetry.emit(
+            "serve_request", rid=req.rid, prompt_len=len(req.prompt),
+            new_tokens=len(req.out_tokens), arrival_s=req.arrival_s,
+            admitted_s=req.admitted_s, ttft_s=req.ttft_s,
+            latency_s=req.latency_s, dropped=False,
+        )
 
     def _admit_one(
         self, req: ServeRequest, clock: Callable[[], float],
@@ -262,6 +273,12 @@ class ContinuousEngine:
         submitted = [self.submit(r) for r in requests] if requests else []
         t0 = time.perf_counter()
         offset = 0.0  # virtual fast-forward while idle
+        telem = self.telemetry.enabled
+        # host-side counters (ints per loop iteration — no device syncs)
+        queue_samples: List[int] = []
+        occ_samples: List[int] = []
+        n_dropped = 0
+        n_steps = 0
 
         def clock() -> float:
             return time.perf_counter() - t0 + offset
@@ -269,9 +286,19 @@ class ContinuousEngine:
         with use_sharding(self.shard_ctx):
             while self.scheduler.has_pending() or self._slot_req:
                 now = clock()
-                admitted, _dropped = self.scheduler.admit(now, self.pool.n_free)
+                admitted, dropped = self.scheduler.admit(now, self.pool.n_free)
+                n_dropped += len(dropped)
+                for req in dropped:
+                    self.telemetry.emit(
+                        "serve_request", rid=req.rid,
+                        prompt_len=len(req.prompt), new_tokens=0,
+                        arrival_s=req.arrival_s, dropped=True,
+                    )
                 for req in admitted:
                     self._admit_one(req, clock, on_token)
+                if telem:
+                    queue_samples.append(self.scheduler.queue_depth(now))
+                    occ_samples.append(self.n_slots - self.pool.n_free)
                 if not self._slot_req:
                     nxt = self.scheduler.next_arrival()
                     if nxt is None:
@@ -279,6 +306,23 @@ class ContinuousEngine:
                     offset += max(0.0, nxt - clock())
                     continue
                 self._step(clock, on_token)
+                n_steps += 1
+        if telem:
+            stats = serving_stats(submitted)
+            stats.update(
+                decode_steps=n_steps,
+                # serving_stats only sees requests passed to generate();
+                # n_dropped also covers requests enqueued via submit()
+                dropped=max(n_dropped, int(stats.get("dropped", 0))),
+                queue_depth_mean=float(np.mean(queue_samples)) if queue_samples else 0.0,
+                queue_depth_max=int(max(queue_samples, default=0)),
+                slot_occupancy_mean=(
+                    float(np.mean(occ_samples)) / self.n_slots
+                    if occ_samples else 0.0
+                ),
+                n_slots=self.n_slots,
+            )
+            self.telemetry.emit("serve_stats", **stats)
         return submitted
 
 

@@ -82,6 +82,15 @@ class FCFSScheduler:
         """Earliest arrival time among queued requests (None if empty)."""
         return self._queue[0].arrival_s if self._queue else None
 
+    def queue_depth(self, now: float) -> int:
+        """Requests that have *arrived* and are waiting for a slot at
+        ``now`` (the telemetry counter — future arrivals don't count as
+        queueing delay)."""
+        n = bisect.bisect_right(
+            [r.arrival_s for r in self._queue], now
+        )
+        return n
+
     def admit(
         self, now: float, free_slots: int
     ) -> Tuple[List[ServeRequest], List[ServeRequest]]:

@@ -40,6 +40,7 @@ from repro.kernels import (
     resolve_fused_backend,
 )
 from repro.models.api import Model
+from repro.telemetry.trust import PER_LAYER_KEY
 from repro.train.loss import check_fused_ce_supported, loss_for
 
 # Metric key carrying each microbatch's supervised-token count (set by the
@@ -267,6 +268,17 @@ def make_train_step(
             )
         )
 
+    # per-layer telemetry recording (off by default): the records stay on
+    # device inside the metrics pytree — no host sync until the Trainer's
+    # log-step fetch pops PER_LAYER_KEY
+    record = tc.record_trust_ratios
+
+    def per_layer_records(params, updates, applied_ratio=None):
+        return core.trust_records(
+            params, updates, layer_axes=model.layer_axes(),
+            phi_bounds=tc.phi_bounds, trust_ratio=applied_ratio,
+        )
+
     if fused_direct:
         _check_fused_supported(tc)
         fused_step = make_fused_lamb_step(
@@ -277,6 +289,7 @@ def make_train_step(
             grad_clip_norm=tc.grad_clip_norm,
             mode=resolve_fused_backend(tc.fused_backend),
             param_specs=param_specs,
+            with_aux=record,
         )
 
         def init_fn(rng) -> TrainState:
@@ -287,17 +300,24 @@ def make_train_step(
 
         def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
             grads, metrics = grads_and_metrics(state.params, batch)
-            params, opt_state = fused_step(state.params, grads, state.opt_state)
+            out = fused_step(state.params, grads, state.opt_state)
+            params, opt_state = out[0], out[1]
             # same metric schema as the unfused path; the subtraction fuses
             # into the norm reduction (no materialized delta tree)
             metrics["update_norm"] = _delta_norm(params, state.params)
-            if tc.log_trust_ratios:
+            if tc.log_trust_ratios or record:
                 updates = jax.tree.map(
                     lambda new, old: new.astype(jnp.float32)
                     - old.astype(jnp.float32),
                     params, state.params,
                 )
-                metrics.update(trust_diag(state.params, updates))
+                if tc.log_trust_ratios:
+                    metrics.update(trust_diag(state.params, updates))
+                if record:
+                    # out[2] = the kernels' applied per-layer ratios (aux)
+                    metrics[PER_LAYER_KEY] = per_layer_records(
+                        state.params, updates, applied_ratio=out[2]
+                    )
             return TrainState(params, opt_state, state.step + 1), metrics
 
         return init_fn, step_fn
@@ -319,6 +339,11 @@ def make_train_step(
         metrics["update_norm"] = _global_norm(updates)
         if tc.log_trust_ratios:
             metrics.update(trust_diag(state.params, updates))
+        if record:
+            # transform chains don't expose their internal ratio; record the
+            # post-hoc phi(||x||)/||Δx|| diagnostic (same semantics as
+            # trust_diag, per layer instead of summarized)
+            metrics[PER_LAYER_KEY] = per_layer_records(state.params, updates)
         return TrainState(params, opt_state, state.step + 1), metrics
 
     return init_fn, step_fn

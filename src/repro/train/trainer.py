@@ -35,6 +35,13 @@ from repro.optim.base import ScheduleState
 from repro.sharding.axes import batch_axes, dp_size, specs_for
 from repro.sharding.context import ShardCtx, use_sharding
 from repro.sharding.placement import batch_sharding, train_state_shardings
+from repro.telemetry import (
+    EventLog,
+    SpanRecorder,
+    TrustRecorder,
+    run_provenance,
+)
+from repro.telemetry.trust import PER_LAYER_KEY
 from repro.train.step import TrainState, make_optimizer, make_train_step
 
 
@@ -79,6 +86,7 @@ class Trainer:
         checkpoint_every: int = 0,
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
+        telemetry: Optional[EventLog] = None,
     ):
         self.model = model
         self.tc = train_cfg
@@ -90,6 +98,17 @@ class Trainer:
         self.checkpoint_every = checkpoint_every
         self.log_every = log_every
         self.log = log_fn
+        # telemetry: a null EventLog unless the caller wires a real sink;
+        # everything below guards on .enabled so the default path does no
+        # extra device syncs and history stays bit-identical
+        self.telemetry = telemetry if telemetry is not None else EventLog()
+        self.spans = SpanRecorder(
+            log=self.telemetry if self.telemetry.enabled else None
+        )
+        self.trust_recorder = TrustRecorder(
+            log=self.telemetry if self.telemetry.enabled else None
+        )
+        self._run_started = False
         self.history: List[Dict[str, float]] = []
         # Effective examples per optimizer step = microbatch × accum_steps:
         # step_fn consumes the already-assembled global batch, so its leading
@@ -170,17 +189,68 @@ class Trainer:
                 )(rng)
         return self.state
 
+    # ------------------------------------------------------------------
+    def _emit_run_start(self) -> None:
+        if self._run_started or not self.telemetry.enabled:
+            return
+        self._run_started = True
+        self.telemetry.emit(
+            "run_start",
+            provenance=run_provenance(
+                mesh=self.mesh, configs=(self.model.cfg, self.tc)
+            ),
+            arch=self.model.cfg.name,
+            optimizer=self.tc.optimizer,
+        )
+
+    def _host_metrics(self, metrics):
+        """Fetch the whole metrics pytree with ONE ``device_get`` (not one
+        blocking sync per metric leaf) and convert on host; pops the
+        per-layer telemetry records out of the scalar history."""
+        host = jax.device_get(dict(metrics))
+        per_layer = host.pop(PER_LAYER_KEY, None)
+        return {k: float(v) for k, v in host.items()}, per_layer
+
+    def _log_step(self, m: Dict[str, float], per_layer, step_s: float,
+                  n_steps: int) -> None:
+        """Emit the log-step telemetry: step event + trust records."""
+        scalars = {k: v for k, v in m.items()
+                   if k not in ("step", "examples_seen", "wall_s", "stage")}
+        ev = dict(step=m["step"], examples_seen=m["examples_seen"],
+                  wall_s=m["wall_s"], metrics=scalars)
+        if "stage" in m:
+            ev["stage"] = m["stage"]
+        if n_steps:
+            ev["step_time_s"] = step_s / n_steps
+        self.telemetry.emit("step", **ev)
+        if per_layer is not None:
+            self.trust_recorder.record(m["step"], per_layer)
+
     def fit(self, data, steps: int) -> List[Dict[str, float]]:
         if self.state is None:
             self.init()
+        self._emit_run_start()
+        telem = self.telemetry.enabled
         t0 = time.perf_counter()
+        since_log = 0
         with use_sharding(self.shard_ctx):
             for i in range(steps):
+                if telem and since_log == 0:
+                    # span boundary: drain prior work so the interval times
+                    # only its own steps (async dispatch would otherwise
+                    # attribute queued work to the wrong interval)
+                    self.spans.start("step", sync=self.state)
                 batch = self._place_batch(next(data))
                 self.examples_seen += _batch_examples(batch)
                 self.state, metrics = self._step_fn(self.state, batch)
+                since_log += 1
                 if (i + 1) % self.log_every == 0 or i == steps - 1:
-                    m = {k: float(v) for k, v in metrics.items()}
+                    m, per_layer = self._host_metrics(metrics)
+                    step_s = (
+                        self.spans.stop("step", sync=self.state,
+                                        count=since_log)
+                        if telem else 0.0
+                    )
                     m["step"] = int(self.state.step)
                     m["examples_seen"] = self.examples_seen
                     m["wall_s"] = time.perf_counter() - t0
@@ -189,6 +259,9 @@ class Trainer:
                         f"step {m['step']:6d} loss {m.get('loss/total', 0.0):.4f} "
                         f"acc {m.get('accuracy', 0.0):.4f}"
                     )
+                    if telem:
+                        self._log_step(m, per_layer, step_s, since_log)
+                    since_log = 0
                 if (
                     self.checkpoint_dir
                     and self.checkpoint_every
@@ -196,6 +269,10 @@ class Trainer:
                 ):
                     save_checkpoint(
                         self.checkpoint_dir, int(self.state.step), self.state.params
+                    )
+                    self.telemetry.emit(
+                        "checkpoint", step=int(self.state.step),
+                        path=self.checkpoint_dir,
                     )
         return self.history
 
@@ -206,11 +283,22 @@ class Trainer:
         """Mixed-batch training: re-jit per stage, carry moments, re-warm-up."""
         if self.state is None:
             self.init()
+        self._emit_run_start()
+        telem = self.telemetry.enabled
+        # one wall clock across all stages, so fit_stages history rows carry
+        # the same ``wall_s`` field as fit's and stay comparable
+        t0 = time.perf_counter()
         for si, stage in enumerate(stages):
             self.log(
                 f"== stage {si}: {stage.name} seq={stage.seq_len} "
                 f"batch={stage.batch_size} steps={stage.steps} "
                 f"lr={stage.learning_rate:.2e} warmup={stage.warmup_steps}"
+            )
+            self.telemetry.emit(
+                "stage_start", stage=si, name=stage.name,
+                seq_len=stage.seq_len, batch_size=stage.batch_size,
+                steps=stage.steps, learning_rate=stage.learning_rate,
+                warmup_steps=stage.warmup_steps,
             )
             opt = make_optimizer(
                 self.model, self.tc, stage.schedule,
@@ -231,19 +319,32 @@ class Trainer:
             data = DataPipeline(
                 self.model.cfg, stage.batch_size, stage.seq_len, seed=data_seed + si
             )
+            since_log = 0
             with use_sharding(self.shard_ctx):
                 for i in range(stage.steps):
+                    if telem and since_log == 0:
+                        self.spans.start("step", sync=self.state)
                     batch = self._place_batch(next(data))
                     self.examples_seen += _batch_examples(batch)
                     self.state, metrics = step_jit(self.state, batch)
+                    since_log += 1
                     if (i + 1) % self.log_every == 0 or i == stage.steps - 1:
-                        m = {k: float(v) for k, v in metrics.items()}
+                        m, per_layer = self._host_metrics(metrics)
+                        step_s = (
+                            self.spans.stop("step", sync=self.state,
+                                            count=since_log)
+                            if telem else 0.0
+                        )
                         m["step"] = int(self.state.step)
                         m["examples_seen"] = self.examples_seen
+                        m["wall_s"] = time.perf_counter() - t0
                         m["stage"] = si
                         self.history.append(m)
                         self.log(
                             f"[{stage.name}] step {m['step']:5d} "
                             f"loss {m.get('loss/total', 0.0):.4f}"
                         )
+                        if telem:
+                            self._log_step(m, per_layer, step_s, since_log)
+                        since_log = 0
         return self.history
