@@ -20,6 +20,11 @@ python -m pytest -q tests/test_kernels.py -k "flash_grad and interpret"
 # — backends × precision × supervision — runs in the suite below)
 python -m pytest -q tests/test_fused_ce.py -k "grad and interpret"
 
+# fast-fail checkpoint gate: atomic-write crash consistency, async
+# double-buffered checkpointer overlap, and full-state resume bit-exactness
+# in-process (the SIGKILL preemption suite rides in test_sharded_train.py)
+python -m pytest -q tests/test_checkpoint.py
+
 # multi-device gate: sharded train step ≡ single-device on 8 virtual CPU
 # devices (the harness subprocess sets --xla_force_host_platform_device_count
 # before jax init — the flag is dead after backend init, same constraint as
@@ -38,8 +43,10 @@ fi
 # continuous-batching serving smoke: tiny workload, must stream and drain
 python examples/serve_continuous.py --requests 4 --slots 2 --arrival-rate 50
 
-# telemetry gate: 20-step tiny-BERT fit with the event log on, RUN_REPORT
-# compared against the committed baseline (schema + presence, not timing)
+# telemetry gate: 20-step tiny-BERT fit with the event log AND async
+# double-buffered checkpointing on, RUN_REPORT compared against the
+# committed baseline (schema + presence, not timing) plus an overlap check
+# on the checkpoint events (background writes must not stall the loop)
 python scripts/telemetry_gate.py
 
 # docs: internal links + doctest-marked code fences in README.md and docs/

@@ -5,13 +5,22 @@ gated against the committed baseline report.
     PYTHONPATH=src python scripts/telemetry_gate.py            # gate
     PYTHONPATH=src python scripts/telemetry_gate.py --write-baseline
 
-Runs ``repro.launch.train --smoke --telemetry-dir`` in a subprocess, then
-``RunReport.compare`` against ``scripts/baselines/run_report_baseline.json``.
+Runs ``repro.launch.train --smoke --telemetry-dir`` in a subprocess — with
+``--async-checkpoint`` on, so the ``checkpoint`` events (and their
+snapshot/blocked/write timings from the double-buffered writer) are part of
+the gated schema — then ``RunReport.compare`` against
+``scripts/baselines/run_report_baseline.json``.
 The tolerances are deliberately loose — this gates the telemetry *schema*
 (sections present, counts exact, provenance populated), not machine speed:
 timing keys are presence-only and the loss tolerance absorbs cross-platform
 float drift.  ``--write-baseline`` refreshes the committed baseline after an
 intentional schema change.
+
+On top of the schema compare, the gate asserts the async checkpointer
+actually *overlapped* compute: background writes report nonzero wall time,
+the loop-visible blocked time stays within a generous multiple of the
+steady per-step time, and logged step times during in-flight saves stay
+within tolerance of steady state.
 """
 from __future__ import annotations
 
@@ -41,11 +50,18 @@ TOLERANCES = {
     "trust_ratios.steps_recorded": 0.0,
     "trust_ratios.last_step": 0.0,
     "trust_ratios.per_leaf.embed.mean": None,
+    "checkpoints.count": 0.0,
+    "checkpoints.last_step": 0.0,
+    "checkpoints.async.count": 0.0,
+    "checkpoints.async.snapshot_s_mean": None,
+    "checkpoints.async.blocked_s_mean": None,
+    "checkpoints.async.write_s_mean": None,
     "events.count": 0.0,
     "events.types.run_start": 0.0,
     "events.types.step": 0.0,
     "events.types.span": 0.0,
     "events.types.trust_ratios": 0.0,
+    "events.types.checkpoint": 0.0,
     "events.types.run_end": 0.0,
     "provenance.git_sha": None,
     "provenance.jax_version": None,
@@ -55,7 +71,7 @@ TOLERANCES = {
 }
 
 
-def run_tiny_fit(telemetry_dir: Path) -> None:
+def run_tiny_fit(telemetry_dir: Path, checkpoint_dir: Path) -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
     env.setdefault("JAX_PLATFORMS", "cpu")
@@ -65,6 +81,10 @@ def run_tiny_fit(telemetry_dir: Path) -> None:
         "--steps", "20", "--batch", "8", "--seq", "32", "--log-every", "5",
         "--fused-lamb", "--log-trust-ratios",
         "--telemetry-dir", str(telemetry_dir),
+        # async double-buffered saves: checkpoint events (with
+        # snapshot/blocked/write timings) become part of the gated schema
+        "--checkpoint-dir", str(checkpoint_dir), "--checkpoint-every", "5",
+        "--async-checkpoint",
     ]
     proc = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
                           text=True, timeout=1200)
@@ -72,6 +92,45 @@ def run_tiny_fit(telemetry_dir: Path) -> None:
         raise RuntimeError(
             f"telemetry run failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
         )
+
+
+def check_async_overlap(events: list) -> list:
+    """Assert the async checkpointer overlapped compute (from raw events).
+
+    Returns a list of error strings (empty = pass).  Bounds are generous —
+    this catches "saves serialize the loop", not machine speed: the
+    loop-visible blocked time and the logged step times during in-flight
+    saves must stay within a multiple of the steady per-step time (estimated
+    as the fastest post-compile logged interval) plus absolute slack.
+    """
+    errors = []
+    asyncs = [e for e in events
+              if e["event"] == "checkpoint" and e.get("mode") == "async"]
+    if not asyncs:
+        return ["no async checkpoint events in the smoke run"]
+    for ev in asyncs:
+        if not ev.get("write_s", 0.0) > 0.0:
+            errors.append(f"checkpoint step {ev['step']}: no background "
+                          f"write timing (write_s={ev.get('write_s')!r})")
+    per = [e["step_time_s"] for e in events
+           if e["event"] == "step" and "step_time_s" in e]
+    if len(per) < 2:
+        return errors + ["too few step_time_s intervals to judge overlap"]
+    steady = min(per[1:])  # interval 1 pays jit compilation
+    bound = max(5.0 * steady, 0.25)
+    for ev in asyncs:
+        if ev["blocked_s"] > bound:
+            errors.append(
+                f"checkpoint step {ev['step']}: blocked_s={ev['blocked_s']:.3f}"
+                f" exceeds {bound:.3f} (5x steady {steady:.3f}s) — the save"
+                f" is not overlapping the previous write")
+    worst = max(per[1:])
+    if worst > 5.0 * steady + 0.25:
+        errors.append(
+            f"step time during in-flight saves ({worst:.3f}s) not within "
+            f"tolerance of steady state ({steady:.3f}s) — saves are "
+            f"stalling the loop")
+    return errors
 
 
 def main() -> int:
@@ -84,15 +143,25 @@ def main() -> int:
     from repro.telemetry import RunReport
 
     with tempfile.TemporaryDirectory() as d:
-        run_tiny_fit(Path(d))
-        report = RunReport.load(Path(d) / "RUN_REPORT.json")
-        events = (Path(d) / "events.jsonl").read_text()
+        run_tiny_fit(Path(d) / "telemetry", Path(d) / "ckpt")
+        report = RunReport.load(Path(d) / "telemetry" / "RUN_REPORT.json")
+        events_text = (Path(d) / "telemetry" / "events.jsonl").read_text()
 
     # the JSONL really is one valid event per line
     from repro.telemetry import validate_event
 
-    for line in events.splitlines():
-        validate_event(json.loads(line))
+    events = []
+    for line in events_text.splitlines():
+        ev = json.loads(line)
+        validate_event(ev)
+        events.append(ev)
+
+    # async saves must actually overlap compute, baseline or not
+    overlap_errors = check_async_overlap(events)
+    for e in overlap_errors:
+        print(f"telemetry_gate: overlap: {e}", file=sys.stderr)
+    if overlap_errors:
+        return 1
 
     if args.write_baseline:
         BASELINE.parent.mkdir(parents=True, exist_ok=True)

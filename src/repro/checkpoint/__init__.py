@@ -1,13 +1,19 @@
+from repro.checkpoint.async_io import AsyncCheckpointer
 from repro.checkpoint.io import (
     checkpoint_step,
+    gc_tmp_dirs,
     latest_checkpoint,
     restore_checkpoint,
     save_checkpoint,
+    write_checkpoint_dir,
 )
 
 __all__ = [
+    "AsyncCheckpointer",
     "checkpoint_step",
+    "gc_tmp_dirs",
     "latest_checkpoint",
     "restore_checkpoint",
     "save_checkpoint",
+    "write_checkpoint_dir",
 ]

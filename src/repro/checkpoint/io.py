@@ -5,6 +5,19 @@ atomic writes (tmp dir + rename), step-numbered checkpoints, latest-pointer,
 restore onto abstract targets (dtype/shape checked), optimizer state
 round-trips because states are plain pytrees of arrays/ints.
 
+Crash consistency is the contract every writer here upholds:
+
+* a checkpoint directory becomes visible only via ``os.rename`` of a fully
+  written tmp dir, so ``step_*`` either has a complete manifest or does not
+  exist;
+* the ``LATEST`` pointer is itself written tmp-file-then-rename, so a crash
+  between checkpoint rename and pointer update can't leave a torn pointer;
+* ``latest_checkpoint`` trusts the pointer only if it names a *complete*
+  checkpoint and otherwise falls back to the newest complete ``step_*`` dir
+  (a crash after checkpoint rename but before pointer rename loses nothing);
+* stray ``.tmp_ckpt_*`` / ``.tmp_latest_*`` debris from a killed writer is
+  garbage-collected at the start of the next save.
+
 Sharded states: ``save_checkpoint`` accepts mesh-sharded arrays directly
 (``np.asarray`` gathers the global value on a single process), and
 ``restore_checkpoint(..., shardings=)`` places each leaf with
@@ -12,6 +25,11 @@ Sharded states: ``save_checkpoint`` accepts mesh-sharded arrays directly
 ``data=8`` FSDP run restores onto a ``data=4,model=2`` mesh (or a single
 device) without a resharding step: the mesh layout lives in the restore
 target, never in the file format.
+
+Extension dtypes (bf16, fp8 — numpy kind ``'V'`` via ml_dtypes) are stored
+as same-width unsigned-int views with the real dtype in the manifest; a
+plain ``np.save`` of such arrays silently degrades to raw void records that
+cannot be viewed back without the manifest.
 """
 from __future__ import annotations
 
@@ -19,31 +37,96 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.common.pytree import tree_leaves_with_paths
 
+# Test-only fault-injection hook: when set, called as ``hook(i, tmp_dir)``
+# after the i-th leaf file of a checkpoint is written (before the atomic
+# rename).  The preemption harness uses it to SIGKILL a run mid-save; unit
+# tests raise from it to simulate write failures.  Never set in production.
+after_leaf_write: Optional[Callable[[int, str], None]] = None
+
+_TMP_PREFIXES = (".tmp_ckpt_", ".tmp_latest_")
+
 
 def _sanitize(path: str) -> str:
     return path.replace("/", "__")
 
 
-def save_checkpoint(directory: str, step: int, tree: Any) -> str:
-    """Write `tree` under directory/step_<N>/ atomically. Returns the path."""
+def _uint_view(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """Savable (array, manifest-dtype) pair; extension dtypes -> uint views."""
+    dtype = str(arr.dtype)
+    if arr.dtype.kind == "V":  # ml_dtypes extension type (bf16, fp8, ...)
+        arr = arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
+    return arr, dtype
+
+
+def _from_uint_view(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if str(arr.dtype) != dtype:
+        arr = arr.view(np.dtype(dtype))
+    return arr
+
+
+def gc_tmp_dirs(directory: str) -> List[str]:
+    """Remove stray ``.tmp_ckpt_*`` dirs / ``.tmp_latest_*`` files left by a
+    crashed writer.  Called at the start of every save; safe because at most
+    one save is ever in flight per directory (the AsyncCheckpointer
+    serializes its writes, and concurrent writers to one directory are not a
+    supported topology)."""
+    removed = []
+    if not os.path.isdir(directory):
+        return removed
+    for name in os.listdir(directory):
+        if not name.startswith(_TMP_PREFIXES):
+            continue
+        path = os.path.join(directory, name)
+        if os.path.isdir(path):
+            shutil.rmtree(path, ignore_errors=True)
+        else:
+            try:
+                os.remove(path)
+            except OSError:
+                continue
+        removed.append(name)
+    return removed
+
+
+def _write_latest(directory: str, name: str) -> None:
+    """Atomically point LATEST at ``name`` (tmp file + rename, never torn)."""
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=".tmp_latest_")
+    with os.fdopen(fd, "w") as f:
+        f.write(name)
+    os.rename(tmp, os.path.join(directory, "LATEST"))
+
+
+def write_checkpoint_dir(
+    directory: str, step: int, leaves: List[Tuple[str, np.ndarray]]
+) -> str:
+    """Atomically publish host-side ``(path, array)`` leaves as step_<N>.
+
+    The shared write path under ``save_checkpoint`` and the background
+    thread of :class:`~repro.checkpoint.async_io.AsyncCheckpointer`; the
+    caller owns getting leaves to host (``np.asarray`` / async D2H).
+    """
     os.makedirs(directory, exist_ok=True)
+    gc_tmp_dirs(directory)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
         manifest = {"step": step, "leaves": []}
-        for path, leaf in tree_leaves_with_paths(tree):
-            arr = np.asarray(leaf)
+        for i, (path, arr) in enumerate(leaves):
+            arr = np.asarray(arr)
             fname = _sanitize(path) + ".npy"
-            np.save(os.path.join(tmp, fname), arr)
+            savable, dtype = _uint_view(arr)
+            np.save(os.path.join(tmp, fname), savable)
+            if after_leaf_write is not None:
+                after_leaf_write(i, tmp)
             manifest["leaves"].append(
-                {"path": path, "file": fname, "dtype": str(arr.dtype),
+                {"path": path, "file": fname, "dtype": dtype,
                  "shape": list(arr.shape)}
             )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -54,22 +137,49 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    with open(os.path.join(directory, "LATEST"), "w") as f:
-        f.write(os.path.basename(final))
+    _write_latest(directory, os.path.basename(final))
     return final
 
 
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Write `tree` under directory/step_<N>/ atomically. Returns the path."""
+    leaves = [(p, np.asarray(leaf)) for p, leaf in tree_leaves_with_paths(tree)]
+    return write_checkpoint_dir(directory, step, leaves)
+
+
+def _is_complete(path: str) -> bool:
+    return os.path.isfile(os.path.join(path, "manifest.json"))
+
+
 def latest_checkpoint(directory: str) -> Optional[str]:
-    pointer = os.path.join(directory, "LATEST")
-    if not os.path.exists(pointer):
+    """Path of the newest *complete* checkpoint, or None.
+
+    The LATEST pointer is authoritative when it names a complete checkpoint;
+    otherwise (missing, stale after a crashed writer, or pointing at debris)
+    fall back to the newest ``step_*`` dir that has a manifest — renames are
+    atomic, so "has a manifest" is exactly "was fully written".
+    """
+    if not os.path.isdir(directory):
         return None
-    with open(pointer) as f:
-        name = f.read().strip()
-    path = os.path.join(directory, name)
-    return path if os.path.isdir(path) else None
+    pointer = os.path.join(directory, "LATEST")
+    if os.path.exists(pointer):
+        with open(pointer) as f:
+            name = f.read().strip()
+        path = os.path.join(directory, name)
+        if os.path.isdir(path) and _is_complete(path):
+            return path
+    for name in sorted(os.listdir(directory), reverse=True):
+        if not name.startswith("step_"):
+            continue
+        path = os.path.join(directory, name)
+        if os.path.isdir(path) and _is_complete(path):
+            return path
+    return None
 
 
-def restore_checkpoint(path: str, target: Any, shardings: Any = None) -> Any:
+def restore_checkpoint(
+    path: str, target: Any, shardings: Any = None, *, cast: bool = False
+) -> Any:
     """Restore into the structure of `target` (arrays or ShapeDtypeStructs).
 
     ``shardings``, when given, is a pytree of ``jax.sharding.Sharding``
@@ -78,6 +188,11 @@ def restore_checkpoint(path: str, target: Any, shardings: Any = None) -> Any:
     sharding as it loads, so a restore onto an N-device mesh materializes
     only ``1/N`` of each FSDP-sharded leaf per device.  Without it, leaves
     come back as host numpy arrays (the original behavior).
+
+    Shape mismatches always raise; dtype mismatches raise unless
+    ``cast=True`` explicitly opts into converting each stored leaf to its
+    target dtype (a silent cast would otherwise mask e.g. restoring fp32
+    masters from a truncated bf16 checkpoint).
     """
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -97,14 +212,22 @@ def restore_checkpoint(path: str, target: Any, shardings: Any = None) -> Any:
         if p not in by_path:
             raise KeyError(f"checkpoint missing leaf {p!r}")
         entry = by_path[p]
-        arr = np.load(os.path.join(path, entry["file"]))
+        arr = _from_uint_view(
+            np.load(os.path.join(path, entry["file"])), entry["dtype"]
+        )
         tgt_shape = tuple(tgt.shape)
         if tuple(arr.shape) != tgt_shape:
             raise ValueError(f"{p}: shape {arr.shape} != target {tgt_shape}")
-        leaf = arr.astype(tgt.dtype)
+        if arr.dtype != np.dtype(tgt.dtype):
+            if not cast:
+                raise ValueError(
+                    f"{p}: dtype {arr.dtype} != target {np.dtype(tgt.dtype)} "
+                    f"(pass cast=True to convert)"
+                )
+            arr = arr.astype(tgt.dtype)
         if p in sh_by_path:
-            leaf = jax.device_put(leaf, sh_by_path[p])
-        leaves.append(leaf)
+            arr = jax.device_put(arr, sh_by_path[p])
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

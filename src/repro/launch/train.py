@@ -2,9 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
         --steps 100 --batch 16 --seq 128 --optimizer lamb [--smoke] \
-        [--mixed-batch] [--checkpoint-dir ckpt/] [--mesh data=8,model=1] \
+        [--mixed-batch] [--checkpoint-dir ckpt/] [--checkpoint-every 50] \
+        [--async-checkpoint] [--resume] [--mesh data=8,model=1] \
         [--accum-steps 4] [--precision bf16] [--fused-lamb] [--fused-ce] \
         [--telemetry-dir runs/x] [--log-trust-ratios]
+
+``--checkpoint-dir`` + ``--checkpoint-every`` persist the full train state
+(params, LAMB moments, step).  ``--async-checkpoint`` makes saves
+double-buffered and non-blocking (disk writes overlap training;
+``checkpoint`` telemetry events carry the timings), and ``--resume``
+continues a killed run from the latest complete checkpoint — bit-exact
+against a run that was never interrupted (docs/reliability.md).
 
 ``--telemetry-dir`` turns on the unified telemetry subsystem: a structured
 JSONL event log (run provenance, per-interval step events, span timings,
@@ -97,6 +105,17 @@ def main() -> None:
                          "(zero overhead)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--async-checkpoint", action="store_true",
+                    help="double-buffered background saves: the step loop "
+                         "pays only the device->host snapshot, the disk "
+                         "write overlaps training (checkpoint telemetry "
+                         "events carry snapshot/blocked/write timings)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest complete checkpoint in "
+                         "--checkpoint-dir (full train state: params, "
+                         "optimizer moments, step) and continue to --steps; "
+                         "the data pipeline is fast-forwarded so the "
+                         "continuation matches an uninterrupted run")
     ap.add_argument("--mesh", default="",
                     help="mesh axes, e.g. data=8,model=1 (uses the first "
                          "prod(sizes) local devices); params + LAMB moments "
@@ -110,6 +129,8 @@ def main() -> None:
 
     if args.accum_steps < 1:
         raise SystemExit(f"--accum-steps must be >= 1, got {args.accum_steps}")
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume requires --checkpoint-dir")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.flash is not None:
         cfg = cfg.replace(use_flash_kernel=args.flash)
@@ -160,6 +181,8 @@ def main() -> None:
         mesh=mesh,
         checkpoint_dir=args.checkpoint_dir or None,
         checkpoint_every=args.checkpoint_every,
+        async_checkpoint=args.async_checkpoint,
+        resume=args.resume,
         log_every=args.log_every,
         telemetry=telemetry,
     )

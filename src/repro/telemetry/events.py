@@ -24,6 +24,7 @@ import dataclasses
 import hashlib
 import json
 import subprocess
+import threading
 import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Union
@@ -38,7 +39,8 @@ EVENT_TYPES = frozenset({
     "step",           # logged training step: metrics + span-timed step seconds
     "span",           # one closed span: name, seconds, count
     "trust_ratios",   # per-layer trust-ratio/norm summaries at a logged step
-    "checkpoint",     # checkpoint written
+    "checkpoint",     # checkpoint written (async saves add snapshot/write timings)
+    "resume",         # training resumed from a persisted checkpoint
     "serve_request",  # one request's lifecycle (incl. deadline drops)
     "serve_stats",    # aggregate serving stats for one generate() run
     "bench_result",   # one benchmark suite's result
@@ -53,6 +55,7 @@ REQUIRED_FIELDS: Dict[str, tuple] = {
     "span": ("name", "seconds"),
     "trust_ratios": ("step", "layers"),
     "checkpoint": ("step", "path"),
+    "resume": ("step", "path"),
     "serve_request": ("rid",),
     "serve_stats": (),
     "bench_result": ("name",),
@@ -111,6 +114,9 @@ class EventLog:
         self._buffer = buffer
         self._seq = 0
         self._fh = None
+        # emit must be thread-safe: the AsyncCheckpointer's background
+        # writer emits checkpoint events while the step loop emits its own
+        self._lock = threading.Lock()
 
     @classmethod
     def to_dir(cls, directory: Union[str, Path],
@@ -131,18 +137,19 @@ class EventLog:
         """Validate, stamp and write one event; no-op when disabled."""
         if not self.enabled:
             return None
-        ev = {"event": event, "seq": self._seq, "t": time.time(), **fields}
-        validate_event(ev)
-        self._seq += 1
-        if self._buffer:
-            self.events.append(ev)
-        if self.path is not None:
-            if self._fh is None:
-                self.path.parent.mkdir(parents=True, exist_ok=True)
-                self._fh = self.path.open("a")
-            self._fh.write(json.dumps(ev, default=_jsonable) + "\n")
-            self._fh.flush()
-        return ev
+        with self._lock:
+            ev = {"event": event, "seq": self._seq, "t": time.time(), **fields}
+            validate_event(ev)
+            self._seq += 1
+            if self._buffer:
+                self.events.append(ev)
+            if self.path is not None:
+                if self._fh is None:
+                    self.path.parent.mkdir(parents=True, exist_ok=True)
+                    self._fh = self.path.open("a")
+                self._fh.write(json.dumps(ev, default=_jsonable) + "\n")
+                self._fh.flush()
+            return ev
 
     def close(self) -> None:
         if self._fh is not None:

@@ -167,9 +167,34 @@ class RunReport:
             ]
         ckpts = by_type.get("checkpoint", [])
         if ckpts:
-            report["checkpoints"] = {
+            section: Dict[str, Any] = {
                 "count": len(ckpts),
                 "last_step": int(ckpts[-1]["step"]),
+            }
+            # async saves carry their phase timings: what the step loop paid
+            # (snapshot + blocked) vs what overlapped with compute (write)
+            asyncs = [ev for ev in ckpts if ev.get("mode") == "async"]
+            if asyncs:
+                def _mean(key):
+                    return float(np.mean([float(ev[key]) for ev in asyncs]))
+
+                section["async"] = {
+                    "count": len(asyncs),
+                    "snapshot_s_mean": _mean("snapshot_s"),
+                    "blocked_s_mean": _mean("blocked_s"),
+                    "blocked_s_max": float(
+                        max(float(ev["blocked_s"]) for ev in asyncs)),
+                    "write_s_mean": _mean("write_s"),
+                    "write_s_total": float(
+                        sum(float(ev["write_s"]) for ev in asyncs)),
+                }
+            report["checkpoints"] = section
+
+        resumes = by_type.get("resume", [])
+        if resumes:
+            report["resume"] = {
+                "count": len(resumes),
+                "step": int(resumes[-1]["step"]),
             }
 
         sreqs = by_type.get("serve_request", [])

@@ -15,6 +15,16 @@ compiles a true SPMD program instead of inferring layouts from one input.
 Parameter init runs under partitionable threefry, making initial values
 invariant to the mesh shape (the legacy RNG lowering changes bits when its
 output is sharded).
+
+Crash safety (``checkpoint_dir`` + ``checkpoint_every``): every save
+persists the *full* ``TrainState`` — params, optimizer moments and the step
+counter — so a resume continues optimization instead of silently restarting
+it.  ``async_checkpoint=True`` routes saves through the double-buffered
+:class:`~repro.checkpoint.async_io.AsyncCheckpointer` (the step loop pays
+only the device→host snapshot; the disk write overlaps training), and
+``resume=True`` restores the latest complete checkpoint at ``fit`` start,
+fast-forwarding the data pipeline so the continuation is bit-exact against
+a run that was never interrupted (see docs/reliability.md).
 """
 from __future__ import annotations
 
@@ -25,7 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    checkpoint_step,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.mixed_batch import Stage
 from repro.data.pipeline import DataPipeline
@@ -84,6 +100,8 @@ class Trainer:
         shard_ctx: Optional[ShardCtx] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 0,
+        async_checkpoint: bool = False,
+        resume: bool = False,
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
         telemetry: Optional[EventLog] = None,
@@ -96,6 +114,12 @@ class Trainer:
             self.shard_ctx = ShardCtx(mesh)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
+        # async: double-buffered background saves (the step loop never
+        # blocks on disk); resume: restore the latest persisted full
+        # TrainState at fit start and continue from its step
+        self.async_checkpoint = async_checkpoint
+        self.resume = resume
+        self._checkpointer: Optional[AsyncCheckpointer] = None
         self.log_every = log_every
         self.log = log_fn
         # telemetry: a null EventLog unless the caller wires a real sink;
@@ -129,10 +153,15 @@ class Trainer:
             model, train_cfg, schedule, param_specs=self._param_specs
         )
         self._init_fn = init_fn
+        # abstract state doubles as the restore target: restore_checkpoint
+        # shape/dtype-checks every leaf against it (and, on a mesh, places
+        # each leaf straight onto its sharding)
+        self._abstract_state = jax.eval_shape(
+            init_fn, jax.random.key(train_cfg.seed)
+        )
         if mesh is not None:
-            abstract = jax.eval_shape(init_fn, jax.random.key(train_cfg.seed))
             self._state_sharding = train_state_shardings(
-                model.defs, abstract, mesh
+                model.defs, self._abstract_state, mesh
             )
         self._step_fn = self._jit_step(step_fn)
         self.state: Optional[TrainState] = None
@@ -226,7 +255,81 @@ class Trainer:
         if per_layer is not None:
             self.trust_recorder.record(m["step"], per_layer)
 
+    # ------------------------------------------------------------------
+    # checkpointing + resume
+    # ------------------------------------------------------------------
+    @property
+    def checkpointer(self) -> AsyncCheckpointer:
+        """Lazy double-buffered async writer (created on first async save)."""
+        if self._checkpointer is None:
+            self._checkpointer = AsyncCheckpointer(
+                self.checkpoint_dir, telemetry=self.telemetry
+            )
+        return self._checkpointer
+
+    def _save_checkpoint(self) -> None:
+        """Persist the FULL TrainState — params, optimizer moments and the
+        step counter.  A params-only save silently restarts optimization on
+        resume: LAMB's m/v moments and the schedule position are state."""
+        step = int(self.state.step)
+        if self.async_checkpoint:
+            self.checkpointer.save(step, self.state)
+            return
+        t0 = time.perf_counter()
+        path = save_checkpoint(self.checkpoint_dir, step, self.state)
+        self.telemetry.emit(
+            "checkpoint", step=step, path=path, mode="sync",
+            write_s=time.perf_counter() - t0,
+        )
+
+    def _drain_checkpoints(self) -> None:
+        """Block until the in-flight async write (if any) is durable, so a
+        returned ``fit`` implies every scheduled checkpoint is on disk."""
+        if self._checkpointer is not None:
+            self._checkpointer.wait()
+
+    def restore(self, path: Optional[str] = None) -> Optional[int]:
+        """Restore the full TrainState from ``path`` (default: the latest
+        complete checkpoint in ``checkpoint_dir``).  Returns the restored
+        step, or None when there is nothing to restore.  On a mesh each
+        leaf is placed straight onto its sharding — a checkpoint written
+        on one mesh shape restores onto another."""
+        if path is None:
+            path = (latest_checkpoint(self.checkpoint_dir)
+                    if self.checkpoint_dir else None)
+        if path is None:
+            return None
+        restored = restore_checkpoint(
+            path, self._abstract_state, shardings=self._state_sharding
+        )
+        if self._state_sharding is None:
+            restored = jax.tree.map(jnp.asarray, restored)
+        self.state = restored
+        step = checkpoint_step(path)
+        self.telemetry.emit("resume", step=step, path=path)
+        self.log(f"resumed step {step} from {path}")
+        return step
+
+    def _maybe_resume(self, data, steps: int) -> int:
+        """With ``resume=True``, restore the latest checkpoint and return
+        the step to continue from (0 when none exists).  The deterministic
+        data iterator is fast-forwarded past the batches the original run
+        already consumed, so the resumed run sees exactly the sequence an
+        uninterrupted run would — the bit-exact-continuation contract the
+        preemption harness asserts."""
+        if not self.resume:
+            return 0
+        step = self.restore()
+        if step is None:
+            return 0
+        start = min(step, steps)
+        for _ in range(start):
+            self.examples_seen += _batch_examples(next(data))
+        return start
+
+    # ------------------------------------------------------------------
     def fit(self, data, steps: int) -> List[Dict[str, float]]:
+        start = self._maybe_resume(data, steps)
         if self.state is None:
             self.init()
         self._emit_run_start()
@@ -234,7 +337,7 @@ class Trainer:
         t0 = time.perf_counter()
         since_log = 0
         with use_sharding(self.shard_ctx):
-            for i in range(steps):
+            for i in range(start, steps):
                 if telem and since_log == 0:
                     # span boundary: drain prior work so the interval times
                     # only its own steps (async dispatch would otherwise
@@ -267,13 +370,8 @@ class Trainer:
                     and self.checkpoint_every
                     and (i + 1) % self.checkpoint_every == 0
                 ):
-                    save_checkpoint(
-                        self.checkpoint_dir, int(self.state.step), self.state.params
-                    )
-                    self.telemetry.emit(
-                        "checkpoint", step=int(self.state.step),
-                        path=self.checkpoint_dir,
-                    )
+                    self._save_checkpoint()
+        self._drain_checkpoints()
         return self.history
 
     # ------------------------------------------------------------------

@@ -9,21 +9,41 @@ on the single real CPU device; same pattern as the production dry-run).
 
 Prints one JSON object on the last stdout line.  Scenarios:
 
-  equiv        sharded step ≡ single-device step (unfused / fused /
-               accum2+bf16, on data=8 and data=4,model=2 meshes)
-  mlm_flash    the paper path: bert-smoke MLM through flash attention,
-               fused LAMB and the fused-CE head (plus the dense-head
-               variant), sharded ≡ single-device
-  stages       mixed-batch fit_stages re-jits correctly on a mesh
-  checkpoint   FSDP state saved on data=8 restores onto data=4,model=2
-               (values, placements, and a post-restore step)
-  memory       per-device param+optimizer bytes: FSDP vs unsharded, live
-               arrays + compiled per-device argument sizes
-  guards       clear errors for non-divisible batches
+  equiv         sharded step ≡ single-device step (unfused / fused /
+                accum2+bf16, on data=8 and data=4,model=2 meshes)
+  mlm_flash     the paper path: bert-smoke MLM through flash attention,
+                fused LAMB and the fused-CE head (plus the dense-head
+                variant), sharded ≡ single-device
+  stages        mixed-batch fit_stages re-jits correctly on a mesh
+  checkpoint    FSDP state saved on data=8 restores onto data=4,model=2
+                (values, placements, and a post-restore step)
+  crash_resume  preemption/fault injection: nested training subprocesses
+                are SIGKILLed mid-training and mid-save (a hook inside the
+                checkpoint write path), then resumed — on the same data=8
+                mesh (bit-exact loss/metric continuation vs an
+                uninterrupted reference) and on data=4,model=2 — with
+                crash-consistency checks on the checkpoint directory
+                (LATEST never names a partial checkpoint; stray tmp dirs
+                are GC'd by the resumed run's first save)
+  memory        per-device param+optimizer bytes: FSDP vs unsharded, live
+                arrays + compiled per-device argument sizes
+  guards        clear errors for non-divisible batches
+
+The ``--victim`` mode is the nested training run the crash_resume scenario
+kills and resumes:
+
+    python tests/sharded_harness.py --victim --ckpt-dir D --steps 8 \
+        --every 2 --mesh data=8,model=1 [--resume] [--out hist.json] \
+        [--kill-after-batches 5 | --kill-at-save 2:3] [--sync-checkpoint]
 """
+import argparse
 import json
 import os
+import shutil
+import signal
+import subprocess
 import sys
+import tempfile
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -32,7 +52,12 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint  # noqa: E402
+from repro.checkpoint import (  # noqa: E402
+    checkpoint_step,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
 from repro.configs import smoke_config  # noqa: E402
 from repro.configs.base import ModelConfig, TrainConfig  # noqa: E402
 from repro.core import make_stage  # noqa: E402
@@ -177,6 +202,180 @@ def scenario_checkpoint(tmpdir="/tmp/sharded_harness_ckpt"):
     }
 
 
+# ---------------------------------------------------------------------------
+# preemption / fault injection: SIGKILL a nested training run, resume it
+# ---------------------------------------------------------------------------
+
+def _kill_after_batches(data, n: int):
+    """Yield ``n`` batches, then SIGKILL the process on the next request —
+    a preemption landing at a chosen training step."""
+    served = 0
+    while True:
+        if served >= n:
+            os.kill(os.getpid(), signal.SIGKILL)
+        served += 1
+        yield next(data)
+
+
+def _arm_mid_save_kill(save_idx: int, leaf_idx: int) -> None:
+    """SIGKILL during the ``save_idx``-th checkpoint write of this process,
+    once ``leaf_idx`` leaves are on disk — i.e. mid-save, before the atomic
+    rename publishes the checkpoint."""
+    from repro.checkpoint import io as ckpt_io
+
+    seen = {"saves": 0}
+
+    def hook(i, _tmp):
+        if i == 0:
+            seen["saves"] += 1
+        if seen["saves"] == save_idx and i == leaf_idx:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    ckpt_io.after_leaf_write = hook
+
+
+def victim(argv) -> None:
+    """One nested training run the crash_resume scenario kills / resumes."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--every", type=int, default=2)
+    ap.add_argument("--mesh", default=MESHES[0])
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--sync-checkpoint", action="store_true")
+    ap.add_argument("--kill-after-batches", type=int, default=None)
+    ap.add_argument("--kill-at-save", default=None, metavar="SAVE:LEAF")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    if args.kill_at_save:
+        save_idx, leaf_idx = (int(x) for x in args.kill_at_save.split(":"))
+        _arm_mid_save_kill(save_idx, leaf_idx)
+
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
+    mesh = make_mesh_from_spec(args.mesh)
+    tr = Trainer(
+        build_model(TINY), tc, mesh=mesh,
+        checkpoint_dir=args.ckpt_dir or None, checkpoint_every=args.every,
+        async_checkpoint=not args.sync_checkpoint, resume=args.resume,
+        log_every=1, log_fn=lambda s: None,
+    )
+    data = DataPipeline(TINY, BATCH, SEQ, seed=0, mesh=mesh)
+    if args.kill_after_batches is not None:
+        data = _kill_after_batches(data, args.kill_after_batches)
+    tr.fit(data, args.steps)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"history": tr.history,
+                       "final_step": int(tr.state.step),
+                       "examples_seen": tr.examples_seen}, f)
+
+
+def _run_victim(*args, expect_kill=False, timeout=600):
+    cmd = [sys.executable, os.path.abspath(__file__), "--victim",
+           *map(str, args)]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+    if expect_kill:
+        if proc.returncode != -signal.SIGKILL:
+            raise RuntimeError(
+                f"victim survived (rc={proc.returncode}):\n"
+                f"{proc.stderr[-3000:]}"
+            )
+    elif proc.returncode != 0:
+        raise RuntimeError(
+            f"victim failed (rc={proc.returncode}):\n{proc.stderr[-3000:]}"
+        )
+    return proc
+
+
+def _history_rows(blob, after_step):
+    """History rows past ``after_step``, minus wall-clock (machine noise)."""
+    return [
+        {k: v for k, v in row.items() if k != "wall_s"}
+        for row in blob["history"] if row["step"] > after_step
+    ]
+
+
+def _stray_tmp_count(ckpt_dir):
+    return sum(n.startswith(".tmp_ckpt_") for n in os.listdir(ckpt_dir))
+
+
+def scenario_crash_resume(steps=8, every=2):
+    """Kill-and-resume: the acceptance gate for crash-safe training.
+
+    An uninterrupted reference run (no checkpointing) fixes the ground-truth
+    loss/metric history.  Victims are SIGKILLed mid-training and mid-save,
+    resumed from the latest *persisted* checkpoint on the same data=8 mesh
+    (history must be bit-exact vs the reference from the restored step on)
+    and on a data=4,model=2 mesh (allclose — cross-mesh reduction order),
+    with crash-consistency checks on the directory in between.
+    """
+    mesh_a, mesh_b = MESHES
+    results = {}
+    with tempfile.TemporaryDirectory() as root:
+        ref_json = os.path.join(root, "ref.json")
+        _run_victim("--steps", steps, "--mesh", mesh_a, "--out", ref_json)
+        with open(ref_json) as f:
+            ref = json.load(f)
+
+        def crash_then_inspect(name, *kill_args):
+            ckpt = os.path.join(root, name)
+            _run_victim("--ckpt-dir", ckpt, "--steps", steps,
+                        "--every", every, "--mesh", mesh_a, *kill_args,
+                        expect_kill=True)
+            latest = latest_checkpoint(ckpt)
+            with open(os.path.join(ckpt, "LATEST")) as f:
+                pointed = os.path.join(ckpt, f.read().strip())
+            return ckpt, {
+                "latest_step": (None if latest is None
+                                else checkpoint_step(latest)),
+                "pointer_names_complete": os.path.isfile(
+                    os.path.join(pointed, "manifest.json")),
+                "stray_tmp_dirs": _stray_tmp_count(ckpt),
+            }
+
+        def resume_and_compare(ckpt, entry, mesh):
+            res_json = ckpt + f"_resume_{mesh.replace('=', '').replace(',', '_')}.json"
+            _run_victim("--ckpt-dir", ckpt, "--steps", steps,
+                        "--every", every, "--mesh", mesh, "--resume",
+                        "--out", res_json)
+            with open(res_json) as f:
+                res = json.load(f)
+            start = entry["latest_step"]
+            rows, ref_rows = _history_rows(res, start), _history_rows(ref, start)
+            return {
+                "resumed_rows": len(rows),
+                "steps_match": ([r["step"] for r in rows]
+                                == [r["step"] for r in ref_rows]),
+                "bitexact": rows == ref_rows,
+                "loss_maxdiff": max(
+                    abs(a["loss/total"] - b["loss/total"])
+                    for a, b in zip(rows, ref_rows)),
+                "final_step": res["final_step"],
+                "examples_seen_match": (res["examples_seen"]
+                                        == ref["examples_seen"]),
+                "tmp_gc_after_resume": _stray_tmp_count(ckpt) == 0,
+                "final_latest_step": checkpoint_step(latest_checkpoint(ckpt)),
+            }
+
+        # -- preemption mid-training: SIGKILL when step 8's batch is pulled
+        ckpt1, e1 = crash_then_inspect(
+            "mid_training", "--kill-after-batches", steps - 1)
+        ckpt1_copy = ckpt1 + "_meshb"
+        shutil.copytree(ckpt1, ckpt1_copy)  # B-mesh resume gets a pristine dir
+        e1["resume_same_mesh"] = resume_and_compare(ckpt1, e1, mesh_a)
+        e1["resume_other_mesh"] = resume_and_compare(
+            ckpt1_copy, {"latest_step": e1["latest_step"]}, mesh_b)
+        results["mid_training"] = e1
+
+        # -- crash mid-save: die inside the 2nd checkpoint write (step 2*every
+        #    stays partial; LATEST must keep naming the complete step `every`)
+        ckpt2, e2 = crash_then_inspect("mid_save", "--kill-at-save", "2:3")
+        e2["resume_same_mesh"] = resume_and_compare(ckpt2, e2, mesh_a)
+        results["mid_save"] = e2
+    return results
+
+
 def scenario_memory():
     from repro.sharding import per_device_state_bytes
 
@@ -240,12 +439,16 @@ SCENARIOS = {
     "mlm_flash": scenario_mlm_flash,
     "stages": scenario_stages,
     "checkpoint": scenario_checkpoint,
+    "crash_resume": scenario_crash_resume,
     "memory": scenario_memory,
     "guards": scenario_guards,
 }
 
 
 def main(argv):
+    if argv and argv[0] == "--victim":
+        victim(argv[1:])
+        return
     names = argv or list(SCENARIOS)
     out = {"devices": len(jax.devices())}
     for name in names:

@@ -1,0 +1,475 @@
+"""Checkpoint round-trips, crash consistency, and the async checkpointer.
+
+Three layers of coverage:
+
+* hypothesis property tests: arbitrary nested pytrees of fp32/bf16/int32
+  arrays and scalar leaves survive ``save_checkpoint`` →
+  ``restore_checkpoint`` *bitwise* (bf16 goes through the uint16-view npy
+  encoding — a plain np.save would degrade it to raw void records);
+* crash consistency: failures injected into the save path (raising
+  ``np.save``/``os.rename``, a hard mid-save abort via the
+  ``after_leaf_write`` hook) must never advance LATEST past the last
+  complete checkpoint, and the next save garbage-collects the debris — the
+  in-process twin of the SIGKILL scenarios in tests/sharded_harness.py;
+* AsyncCheckpointer: saves overlap a slow disk (save returns while the
+  write is still in flight), at most one write is in flight, background
+  failures surface on ``wait``, and ``checkpoint`` telemetry events carry
+  the snapshot/blocked/write timings.
+"""
+import itertools
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import pytest
+
+try:  # property tests gate on hypothesis; everything else must still run
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import (  # noqa: E402
+    AsyncCheckpointer,
+    checkpoint_step,
+    gc_tmp_dirs,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint import io as ckpt_io  # noqa: E402
+from repro.telemetry import EventLog  # noqa: E402
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS,
+    reason="hypothesis not installed (see requirements-dev.txt)",
+)
+
+
+@pytest.fixture(autouse=True)
+def _reset_fault_hook():
+    yield
+    ckpt_io.after_leaf_write = None
+
+
+# ---------------------------------------------------------------------------
+# property tests: round-trip over structures, dtypes, scalar leaves
+# ---------------------------------------------------------------------------
+
+def _leaf_arrays(rng: np.random.Generator, spec):
+    dtype, shape = spec
+    if dtype == "int32":
+        return rng.integers(-1000, 1000, size=shape).astype(np.int32)
+    x = rng.standard_normal(shape).astype(np.float32)
+    if dtype == "bfloat16":
+        return np.asarray(jnp.asarray(x, jnp.bfloat16))
+    return x
+
+
+_DTYPES = ["float32", "bfloat16", "int32"]
+_SHAPES = [(), (3,), (2, 4), (1, 2, 3)]  # incl. 0-d scalars
+
+if HAS_HYPOTHESIS:
+    _leaf_specs = st.tuples(st.sampled_from(_DTYPES), st.sampled_from(_SHAPES))
+    _trees = st.recursive(
+        _leaf_specs,
+        lambda kids: st.dictionaries(
+            st.sampled_from(["w", "b", "mu", "nu", "blocks", "s/1"]), kids,
+            min_size=1, max_size=3,
+        ),
+        max_leaves=8,
+    )
+    SETTINGS = hypothesis.settings(
+        deadline=None, max_examples=20, derandomize=True,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow],
+    )
+
+
+def _assert_bitwise_equal(a, b):
+    fa = jax.tree_util.tree_leaves_with_path(a)
+    fb = jax.tree_util.tree_leaves_with_path(b)
+    assert [k for k, _ in fa] == [k for k, _ in fb]
+    for (_, x), (_, y) in zip(fa, fb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert x.tobytes() == y.tobytes()
+
+
+def _roundtrip_case(tree_spec, step):
+    rng = np.random.default_rng(0)
+    tree = jax.tree.map(
+        lambda s: _leaf_arrays(rng, s), tree_spec,
+        is_leaf=lambda n: isinstance(n, tuple) and len(n) == 2
+        and isinstance(n[0], str),
+    )
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, step, tree)
+        assert checkpoint_step(path) == step
+        assert latest_checkpoint(d) == path
+        restored = restore_checkpoint(path, tree)
+    _assert_bitwise_equal(tree, restored)
+
+
+if HAS_HYPOTHESIS:
+
+    @SETTINGS
+    @hypothesis.given(tree_spec=_trees, step=st.integers(0, 10**7))
+    def test_roundtrip_preserves_bits(tree_spec, step):
+        _roundtrip_case(tree_spec, step)
+
+else:
+
+    @needs_hypothesis
+    def test_roundtrip_preserves_bits():
+        raise AssertionError("unreachable: skipif gates this test")
+
+
+@pytest.mark.parametrize(
+    "dtype,shape", list(itertools.product(_DTYPES, _SHAPES)),
+    ids=lambda v: str(v).replace(" ", ""),
+)
+def test_roundtrip_dtype_shape_grid(dtype, shape):
+    """Deterministic twin of the hypothesis sweep: every dtype × shape
+    combination (incl. bf16 scalars, whose npy encoding goes through the
+    uint16 view) round-trips bitwise, nested one level deep."""
+    _roundtrip_case({"outer": {"leaf": (dtype, shape)}, "top": (dtype, ())}, 7)
+
+
+def test_jax_arrays_and_scalar_step_roundtrip(tmp_path):
+    tree = {"w": jnp.ones((4, 2), jnp.bfloat16) * 1.5,
+            "step": jnp.asarray(7, jnp.int32),
+            "nested": {"v": jnp.arange(6, dtype=jnp.float32)}}
+    path = save_checkpoint(str(tmp_path), 7, tree)
+    restored = restore_checkpoint(path, jax.eval_shape(lambda: tree))
+    _assert_bitwise_equal(jax.tree.map(np.asarray, tree), restored)
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"w": np.ones((4, 4), np.float32)})
+    bad = {"w": jax.ShapeDtypeStruct((2, 2), jnp.float32)}
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(latest_checkpoint(str(tmp_path)), bad)
+
+
+def test_restore_dtype_mismatch_raises_unless_cast(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"w": np.ones((3,), np.float32)})
+    bad = {"w": jax.ShapeDtypeStruct((3,), jnp.bfloat16)}
+    path = latest_checkpoint(str(tmp_path))
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(path, bad)
+    restored = restore_checkpoint(path, bad, cast=True)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"w": np.ones((3,), np.float32)})
+    bad = {"w": np.ones((3,), np.float32), "extra": np.zeros((2,), np.float32)}
+    with pytest.raises(KeyError, match="extra"):
+        restore_checkpoint(latest_checkpoint(str(tmp_path)), bad)
+
+
+# ---------------------------------------------------------------------------
+# latest_checkpoint / checkpoint_step edge cases
+# ---------------------------------------------------------------------------
+
+def test_latest_checkpoint_empty_and_missing_dir(tmp_path):
+    assert latest_checkpoint(str(tmp_path)) is None           # empty dir
+    assert latest_checkpoint(str(tmp_path / "nope")) is None  # missing dir
+
+
+def test_latest_checkpoint_orders_steps(tmp_path):
+    tree = {"w": np.ones((2,), np.float32)}
+    for step in (1, 2, 10):  # zero-padded names keep lexicographic == numeric
+        save_checkpoint(str(tmp_path), step, tree)
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 10
+
+
+def test_stale_pointer_falls_back_to_newest_complete(tmp_path):
+    tree = {"w": np.ones((2,), np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    p2 = save_checkpoint(str(tmp_path), 2, tree)
+    shutil.rmtree(p2)  # LATEST now names a vanished checkpoint
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 1
+
+
+def test_pointer_to_partial_checkpoint_is_ignored(tmp_path):
+    tree = {"w": np.ones((2,), np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # a "checkpoint" dir with no manifest = a torn write that never happened
+    os.makedirs(tmp_path / "step_00000009")
+    (tmp_path / "LATEST").write_text("step_00000009")
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 1
+
+
+def test_stale_pointer_with_no_complete_checkpoint(tmp_path):
+    (tmp_path / "LATEST").write_text("step_00000004")
+    assert latest_checkpoint(str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# crash consistency: injected failures in the save path
+# ---------------------------------------------------------------------------
+
+def test_np_save_failure_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    tree = {"w": np.ones((2,), np.float32), "b": np.zeros((2,), np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+
+    real_save = np.save
+    calls = {"n": 0}
+
+    def flaky_save(path, arr, **kw):
+        if calls["n"] >= 1:
+            raise OSError("disk full")
+        calls["n"] += 1
+        return real_save(path, arr, **kw)
+
+    monkeypatch.setattr(np, "save", flaky_save)
+    with pytest.raises(OSError, match="disk full"):
+        save_checkpoint(str(tmp_path), 2, tree)
+    monkeypatch.undo()
+
+    # the failed save cleaned its tmp dir and never touched LATEST
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 1
+    assert not any(n.startswith(".tmp_ckpt_") for n in os.listdir(tmp_path))
+
+
+def test_rename_failure_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    tree = {"w": np.ones((2,), np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+
+    def bad_rename(src, dst):
+        raise OSError("rename EIO")
+
+    monkeypatch.setattr(ckpt_io.os, "rename", bad_rename)
+    with pytest.raises(OSError, match="rename"):
+        save_checkpoint(str(tmp_path), 2, tree)
+    monkeypatch.undo()
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 1
+    assert not any(n.startswith(".tmp_ckpt_") for n in os.listdir(tmp_path))
+
+
+class _HardCrash(BaseException):
+    """Not an Exception: skips the save's cleanup path, like a SIGKILL."""
+
+
+def test_mid_save_hard_crash_then_gc_on_next_save(tmp_path):
+    tree = {"w": np.ones((2,), np.float32), "b": np.zeros((3,), np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+
+    def die_after_first_leaf(i, _tmp):
+        if i == 0:
+            raise _HardCrash
+
+    ckpt_io.after_leaf_write = die_after_first_leaf
+    with pytest.raises(_HardCrash):
+        save_checkpoint(str(tmp_path), 2, tree)
+    ckpt_io.after_leaf_write = None
+
+    # the aborted write left debris, but LATEST still names step 1 and the
+    # partial dir is never eligible as a checkpoint
+    assert any(n.startswith(".tmp_ckpt_") for n in os.listdir(tmp_path))
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 1
+
+    # the next save garbage-collects the stray tmp dir and publishes
+    save_checkpoint(str(tmp_path), 3, tree)
+    strays = [n for n in os.listdir(tmp_path) if n.startswith(".tmp_ckpt_")]
+    assert strays == []
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 3
+
+
+def test_gc_tmp_dirs_removes_manual_debris(tmp_path):
+    os.makedirs(tmp_path / ".tmp_ckpt_dead")
+    (tmp_path / ".tmp_latest_dead").write_text("x")
+    (tmp_path / "keep.txt").write_text("x")
+    removed = gc_tmp_dirs(str(tmp_path))
+    assert sorted(removed) == [".tmp_ckpt_dead", ".tmp_latest_dead"]
+    assert (tmp_path / "keep.txt").exists()
+
+
+def test_latest_pointer_written_atomically(tmp_path, monkeypatch):
+    """LATEST updates go through tmp-file + rename: the pointer file itself
+    is never open for writing in place."""
+    tree = {"w": np.ones((2,), np.float32)}
+    renames = []
+    real_rename = os.rename
+
+    def spy_rename(src, dst):
+        renames.append((os.path.basename(src), os.path.basename(dst)))
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(ckpt_io.os, "rename", spy_rename)
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert any(src.startswith(".tmp_latest_") and dst == "LATEST"
+               for src, dst in renames), renames
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    return {"params": {"w": jnp.ones((8, 4)) * 2.0},
+            "mu": {"w": jnp.zeros((8, 4))},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_async_save_roundtrip_and_latest_persisted(tmp_path):
+    state = _tiny_state()
+    with AsyncCheckpointer(str(tmp_path)) as ck:
+        assert ck.latest_persisted_step() is None
+        ck.save(3, state)
+        path = ck.wait()
+        assert ck.latest_persisted_step() == 3
+    restored = restore_checkpoint(path, jax.eval_shape(lambda: state))
+    _assert_bitwise_equal(jax.tree.map(np.asarray, state), restored)
+
+
+def test_async_write_overlaps_caller(tmp_path, monkeypatch):
+    """save() must return while the (artificially slow) disk write is still
+    in flight; the checkpoint becomes visible only after wait()."""
+    real_save = np.save
+
+    def slow_save(path, arr, **kw):
+        time.sleep(0.15)
+        return real_save(path, arr, **kw)
+
+    monkeypatch.setattr(np, "save", slow_save)
+    state = _tiny_state()  # 3 leaves -> >= 0.45s of "disk" time
+    with AsyncCheckpointer(str(tmp_path)) as ck:
+        t0 = time.perf_counter()
+        ck.save(3, state)
+        returned_after = time.perf_counter() - t0
+        assert returned_after < 0.4, returned_after
+        assert ck.latest_persisted_step() is None  # not durable yet
+        ck.wait()
+        assert ck.latest_persisted_step() == 3
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 3
+
+
+def test_async_at_most_one_write_in_flight(tmp_path, monkeypatch):
+    """A second save waits out the first write (recorded as blocked_s), so
+    writes never queue unboundedly and publish in order."""
+    real_save = np.save
+
+    def slow_save(path, arr, **kw):
+        time.sleep(0.05)
+        return real_save(path, arr, **kw)
+
+    monkeypatch.setattr(np, "save", slow_save)
+    log = EventLog.memory()
+    state = _tiny_state()
+    with AsyncCheckpointer(str(tmp_path), telemetry=log) as ck:
+        ck.save(1, state)
+        ck.save(2, state)  # must block on save(1)'s write
+        ck.wait()
+    evs = [e for e in log.events if e["event"] == "checkpoint"]
+    assert [e["step"] for e in evs] == [1, 2]
+    assert all(e["mode"] == "async" for e in evs)
+    for key in ("snapshot_s", "blocked_s", "write_s"):
+        assert all(key in e for e in evs), evs
+    assert evs[1]["blocked_s"] > 0.0, evs
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 2
+
+
+def test_async_background_failure_surfaces_on_wait(tmp_path, monkeypatch):
+    def bad_save(path, arr, **kw):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(np, "save", bad_save)
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(1, _tiny_state())
+    with pytest.raises(OSError, match="disk gone"):
+        ck.wait()
+    monkeypatch.undo()
+    assert ck.latest_persisted_step() is None
+    assert latest_checkpoint(str(tmp_path)) is None
+    ck.close()
+
+
+def test_async_resumes_latest_persisted_from_disk(tmp_path):
+    save_checkpoint(str(tmp_path), 4, {"w": np.ones((2,), np.float32)})
+    ck = AsyncCheckpointer(str(tmp_path))
+    assert ck.latest_persisted_step() == 4
+    ck.close()
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: full-state saves + resume
+# ---------------------------------------------------------------------------
+
+def _tiny_trainer(ckpt_dir=None, **kw):
+    from repro.configs.base import TrainConfig
+    from repro.models import build_model
+    from repro.train import Trainer
+
+    from tests.conftest import tiny_dense
+
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    return Trainer(build_model(tiny_dense()), tc, checkpoint_dir=ckpt_dir,
+                   log_every=1, log_fn=lambda s: None, **kw)
+
+
+def _data(seed=0):
+    from repro.data import DataPipeline
+
+    from tests.conftest import tiny_dense
+
+    return DataPipeline(tiny_dense(), 8, 16, seed=seed)
+
+
+def test_trainer_saves_full_train_state(tmp_path):
+    tr = _tiny_trainer(str(tmp_path), checkpoint_every=2)
+    tr.fit(_data(), 2)
+    path = latest_checkpoint(str(tmp_path))
+    manifest = json.loads(
+        (open(os.path.join(path, "manifest.json"))).read())
+    paths = [e["path"] for e in manifest["leaves"]]
+    assert any(p.startswith("params/") for p in paths)
+    assert any(p.startswith("opt_state/") for p in paths), (
+        "optimizer moments must survive a restart")
+    assert "step" in paths, "the step counter must survive a restart"
+
+
+@pytest.mark.parametrize("use_async", [False, True])
+def test_trainer_resume_continues_bit_exact(tmp_path, use_async):
+    ref = _tiny_trainer()
+    ref.fit(_data(), 5)
+
+    tr1 = _tiny_trainer(str(tmp_path), checkpoint_every=3,
+                        async_checkpoint=use_async)
+    tr1.fit(_data(), 3)
+
+    tr2 = _tiny_trainer(str(tmp_path), checkpoint_every=3,
+                        async_checkpoint=use_async, resume=True)
+    tr2.fit(_data(), 5)
+
+    def rows(tr, after):
+        return [{k: v for k, v in r.items() if k != "wall_s"}
+                for r in tr.history if r["step"] > after]
+
+    assert rows(tr2, 3) == rows(ref, 3)
+    assert tr2.examples_seen == ref.examples_seen
+    assert int(tr2.state.step) == 5
+
+
+def test_trainer_resume_with_no_checkpoint_starts_fresh(tmp_path):
+    tr = _tiny_trainer(str(tmp_path), checkpoint_every=0, resume=True)
+    tr.fit(_data(), 2)
+    assert int(tr.state.step) == 2
+
+
+def test_trainer_resume_past_target_runs_nothing(tmp_path):
+    tr1 = _tiny_trainer(str(tmp_path), checkpoint_every=2)
+    tr1.fit(_data(), 4)
+    tr2 = _tiny_trainer(str(tmp_path), checkpoint_every=2, resume=True)
+    tr2.fit(_data(), 3)  # target already passed by the checkpoint
+    assert tr2.history == []
+    assert int(tr2.state.step) == 4

@@ -73,6 +73,65 @@ def test_checkpoint_roundtrips_across_mesh_shapes(report):
     assert ck["post_restore_loss_finite"]
 
 
+# ---------------------------------------------------------------------------
+# preemption / fault injection (crash_resume scenario)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", ["mid_training", "mid_save"])
+def test_crash_leaves_directory_consistent(report, case):
+    """After a SIGKILL — including one landing mid-save — LATEST must name a
+    fully written checkpoint (atomic rename means manifest present ⟺
+    complete), with the step a multiple of the checkpoint cadence."""
+    entry = report["crash_resume"][case]
+    assert entry["latest_step"] is not None, entry
+    assert entry["latest_step"] % 2 == 0, entry
+    assert entry["pointer_names_complete"], entry
+
+
+def test_mid_save_kill_keeps_previous_checkpoint(report):
+    """The kill lands inside the SECOND checkpoint's write, so the first
+    (step 2) must stay the latest complete one, and the partial write must
+    be visible only as a stray tmp dir."""
+    entry = report["crash_resume"]["mid_save"]
+    assert entry["latest_step"] == 2, entry
+    assert entry["stray_tmp_dirs"] >= 1, entry
+
+
+@pytest.mark.parametrize("case", ["mid_training", "mid_save"])
+def test_resume_same_mesh_is_bit_exact(report, case):
+    """A killed run resumed on the same data=8 mesh continues with
+    loss/metric history BIT-EXACT vs an uninterrupted reference run, from
+    the restored step through the end (full state round-trips: params,
+    LAMB moments, step counter, data position)."""
+    res = report["crash_resume"][case]["resume_same_mesh"]
+    assert res["resumed_rows"] > 0, res
+    assert res["steps_match"], res
+    assert res["bitexact"], res
+    assert res["loss_maxdiff"] == 0.0, res
+    assert res["final_step"] == 8, res
+    assert res["examples_seen_match"], res
+
+
+def test_resume_other_mesh_shape(report):
+    """The same crashed run resumes on a data=4,model=2 mesh: steps and
+    examples_seen exact, loss within the cross-mesh reduction-order
+    tolerance used by the equivalence suite."""
+    res = report["crash_resume"]["mid_training"]["resume_other_mesh"]
+    assert res["steps_match"], res
+    assert res["loss_maxdiff"] < LOSS_TOL, res
+    assert res["final_step"] == 8, res
+    assert res["examples_seen_match"], res
+
+
+@pytest.mark.parametrize("case", ["mid_training", "mid_save"])
+def test_resume_garbage_collects_tmp_dirs(report, case):
+    """The resumed run's first save must GC the crashed writer's debris,
+    and its own checkpoints must advance LATEST to the final step."""
+    res = report["crash_resume"][case]["resume_same_mesh"]
+    assert res["tmp_gc_after_resume"], res
+    assert res["final_latest_step"] == 8, res
+
+
 def test_fsdp_shrinks_per_device_state_memory(report):
     """Params + LAMB moments per device must shrink ≥4× under data=8 FSDP
     (measured ~8× — replicated scalars keep it from exactly N×)."""
