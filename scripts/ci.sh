@@ -25,6 +25,13 @@ python -m pytest -q tests/test_fused_ce.py -k "grad and interpret"
 # in-process (the SIGKILL preemption suite rides in test_sharded_train.py)
 python -m pytest -q tests/test_checkpoint.py
 
+# fast-fail fault-tolerance gate: spike-detector properties, in-jit skip-step
+# state identity, and fault-injector determinism — the cheap single-device
+# slice of the robustness suite (trainer rollback/preemption integration and
+# the multi-device nan_skip/spike_rollback/sigterm_resume scenarios run in
+# the full suite and test_sharded_train.py below)
+python -m pytest -q tests/test_fault_tolerance.py -k "detector or injector or skip_step"
+
 # multi-device gate: sharded train step ≡ single-device on 8 virtual CPU
 # devices (the harness subprocess sets --xla_force_host_platform_device_count
 # before jax init — the flag is dead after backend init, same constraint as

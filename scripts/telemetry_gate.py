@@ -8,7 +8,9 @@ gated against the committed baseline report.
 Runs ``repro.launch.train --smoke --telemetry-dir`` in a subprocess — with
 ``--async-checkpoint`` on, so the ``checkpoint`` events (and their
 snapshot/blocked/write timings from the double-buffered writer) are part of
-the gated schema — then ``RunReport.compare`` against
+the gated schema, and ``--skip-nonfinite`` on, so the in-jit non-finite
+guard is live in the gated path (a clean run must skip zero steps and
+report ``run_end.skipped_steps == 0``) — then ``RunReport.compare`` against
 ``scripts/baselines/run_report_baseline.json``.
 The tolerances are deliberately loose — this gates the telemetry *schema*
 (sections present, counts exact, provenance populated), not machine speed:
@@ -68,6 +70,10 @@ TOLERANCES = {
     "provenance.device_kind": None,
     "provenance.config_hash": None,
     "run_end.status": 0.0,
+    "run_end.final_step": 0.0,
+    "run_end.skipped_steps": 0.0,
+    "run_end.final_loss": 0.25,
+    "status": 0.0,
 }
 
 
@@ -85,6 +91,9 @@ def run_tiny_fit(telemetry_dir: Path, checkpoint_dir: Path) -> None:
         # snapshot/blocked/write timings) become part of the gated schema
         "--checkpoint-dir", str(checkpoint_dir), "--checkpoint-every", "5",
         "--async-checkpoint",
+        # guard-enabled smoke: the non-finite skip-step select is compiled
+        # into the gated step function; a clean run must skip nothing
+        "--skip-nonfinite",
     ]
     proc = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
                           text=True, timeout=1200)

@@ -1,6 +1,7 @@
 from repro.checkpoint.async_io import AsyncCheckpointer
 from repro.checkpoint.io import (
     checkpoint_step,
+    discard_checkpoints_after,
     gc_tmp_dirs,
     latest_checkpoint,
     restore_checkpoint,
@@ -11,6 +12,7 @@ from repro.checkpoint.io import (
 __all__ = [
     "AsyncCheckpointer",
     "checkpoint_step",
+    "discard_checkpoints_after",
     "gc_tmp_dirs",
     "latest_checkpoint",
     "restore_checkpoint",

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from typing import Any, List, Optional, Tuple
 
 import numpy as np
@@ -127,17 +128,30 @@ class AsyncCheckpointer:
         return path
 
     # ------------------------------------------------------------------
-    def wait(self) -> Optional[str]:
+    def wait(self, timeout: Optional[float] = None) -> Optional[str]:
         """Block until the in-flight write (if any) is durable.
 
         Returns the persisted checkpoint path, or None if nothing was in
         flight.  A failed background write re-raises here — on the step
         loop's thread — instead of being swallowed.
+
+        ``timeout`` (seconds) bounds the wait — the preemption grace
+        window.  On timeout the write is left in flight (it may still
+        complete before process exit; the atomic rename protocol keeps the
+        previous checkpoint intact either way) and None is returned.
         """
-        future, self._future = self._future, None
+        future = self._future
         if future is None:
             return None
-        return future.result()
+        try:
+            result = future.result(timeout)
+        except (_FuturesTimeout, TimeoutError):
+            return None
+        except BaseException:
+            self._future = None
+            raise
+        self._future = None
+        return result
 
     def latest_persisted_step(self) -> Optional[int]:
         """Step of the newest checkpoint whose atomic rename completed.

@@ -151,30 +151,79 @@ def _is_complete(path: str) -> bool:
     return os.path.isfile(os.path.join(path, "manifest.json"))
 
 
-def latest_checkpoint(directory: str) -> Optional[str]:
+def _step_of(name: str) -> Optional[int]:
+    try:
+        return int(name[len("step_"):])
+    except ValueError:
+        return None
+
+
+def latest_checkpoint(directory: str,
+                      max_step: Optional[int] = None) -> Optional[str]:
     """Path of the newest *complete* checkpoint, or None.
 
     The LATEST pointer is authoritative when it names a complete checkpoint;
     otherwise (missing, stale after a crashed writer, or pointing at debris)
     fall back to the newest ``step_*`` dir that has a manifest — renames are
     atomic, so "has a manifest" is exactly "was fully written".
+
+    ``max_step`` bounds the search to checkpoints with ``step <= max_step``
+    (the supervisor's rollback target: the newest checkpoint a healthy loss
+    observation has *validated* — a save that raced ahead of a poisoned
+    update must not come back).
     """
     if not os.path.isdir(directory):
         return None
-    pointer = os.path.join(directory, "LATEST")
-    if os.path.exists(pointer):
-        with open(pointer) as f:
-            name = f.read().strip()
-        path = os.path.join(directory, name)
-        if os.path.isdir(path) and _is_complete(path):
-            return path
+    if max_step is None:
+        pointer = os.path.join(directory, "LATEST")
+        if os.path.exists(pointer):
+            with open(pointer) as f:
+                name = f.read().strip()
+            path = os.path.join(directory, name)
+            if os.path.isdir(path) and _is_complete(path):
+                return path
     for name in sorted(os.listdir(directory), reverse=True):
         if not name.startswith("step_"):
+            continue
+        step = _step_of(name)
+        if step is None or (max_step is not None and step > max_step):
             continue
         path = os.path.join(directory, name)
         if os.path.isdir(path) and _is_complete(path):
             return path
     return None
+
+
+def discard_checkpoints_after(directory: str, step: int) -> List[str]:
+    """Remove every checkpoint with ``step > step`` and re-point LATEST.
+
+    The rollback invalidation step: checkpoints newer than the restored one
+    may hold poisoned state, and both future in-run saves (same step number
+    after the counter rewinds) and a later ``--resume`` must never see
+    them.  Returns the removed directory names."""
+    removed: List[str] = []
+    if not os.path.isdir(directory):
+        return removed
+    keep_newest: Optional[int] = None
+    for name in os.listdir(directory):
+        if not name.startswith("step_"):
+            continue
+        s = _step_of(name)
+        if s is None:
+            continue
+        if s > step:
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+            removed.append(name)
+        elif _is_complete(os.path.join(directory, name)):
+            keep_newest = s if keep_newest is None else max(keep_newest, s)
+    if keep_newest is not None:
+        _write_latest(directory, f"step_{keep_newest:08d}")
+    else:
+        try:
+            os.remove(os.path.join(directory, "LATEST"))
+        except OSError:
+            pass
+    return removed
 
 
 def restore_checkpoint(

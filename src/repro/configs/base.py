@@ -155,6 +155,10 @@ class TrainConfig:
     use_fused_lamb: bool = False   # Pallas/XLA fused LAMB update in the step
     fused_backend: str = "auto"    # auto | pallas | xla | interpret
     seed: int = 0
+    # in-jit non-finite guard: one fused all-finite reduction over loss +
+    # grads; a non-finite step passes the whole TrainState through unchanged
+    # (schedule counters included) and bumps the persisted `skipped` counter
+    skip_nonfinite: bool = False
     log_trust_ratios: bool = False
     # per-layer trust-ratio/norm recording: the step returns, under
     # metrics["telemetry/per_layer"], pytrees of per-layer-slice vectors

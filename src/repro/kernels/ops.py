@@ -96,8 +96,16 @@ def fused_lamb_apply(
     mode: str = "xla",
     param_specs: Optional[Any] = None,
     with_aux: bool = False,
+    ok: Optional[jnp.ndarray] = None,
 ) -> Tuple[Any, ...]:
     """One fused LAMB step over a whole pytree: (params', mu', nu').
+
+    ``ok`` (scalar bool, optional) is the non-finite guard: when False the
+    computed update is discarded leaf-by-leaf — params and both moments
+    where-select back to their inputs inside the same fused expression, so
+    a skipped step costs no extra memory traffic and the state comes back
+    bit-identical.  The caller gates the counters (see
+    :func:`make_fused_lamb_step`).
 
     ``with_aux=True`` appends a fourth output: a pytree shaped like
     ``params`` of the *applied* per-layer trust ratios (each backend's
@@ -169,9 +177,14 @@ def fused_lamb_apply(
                 interpret=leaf_mode == "interpret",
                 return_ratio=with_aux,
             )
-        xs.append(out[0])
-        ms.append(out[1])
-        vs.append(out[2])
+        x_new, m_new, v_new = out[0], out[1], out[2]
+        if ok is not None:
+            x_new = jnp.where(ok, x_new, p)
+            m_new = jnp.where(ok, m_new, m)
+            v_new = jnp.where(ok, v_new, v)
+        xs.append(x_new)
+        ms.append(m_new)
+        vs.append(v_new)
         if with_aux:
             rs.append(out[3])
 
@@ -219,15 +232,19 @@ def make_fused_lamb_step(
     that order.  ``param_specs`` propagates the per-leaf sharded-parameter
     fallback (see :func:`fused_lamb_apply`).  With ``with_aux`` the step
     returns ``(new_params, new_state, trust_ratios)`` — the applied
-    per-layer ratios threaded out for the telemetry recorder.  Invariant:
-    keeping this sequence in one place is what guarantees fused-direct vs
-    transform parity.
+    per-layer ratios threaded out for the telemetry recorder.  ``ok``
+    (scalar bool) is the train step's non-finite guard: when False the
+    apply where-selects everything back to its inputs and *neither counter
+    advances* — the skipped step leaves the schedule position untouched.
+    Invariant: keeping this sequence in one place is what guarantees
+    fused-direct vs transform parity.
     """
 
-    def step(params, grads, state: FusedLambState):
+    def step(params, grads, state: FusedLambState, ok=None):
         if grad_clip_norm is not None:
             grads = clip_tree_by_global_norm(grads, grad_clip_norm)
-        count = state.count + 1
+        adv = 1 if ok is None else ok.astype(state.count.dtype)
+        count = state.count + adv
         lr_t = (
             learning_rate(state.sched_count)
             if callable(learning_rate)
@@ -238,10 +255,11 @@ def make_fused_lamb_step(
             b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
             wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
             phi_bounds=phi_bounds, mode=mode, param_specs=param_specs,
-            with_aux=with_aux,
+            with_aux=with_aux, ok=ok,
         )
         new_params, new_mu, new_nu = out[:3]
-        new_state = FusedLambState(count, state.sched_count + 1, new_mu, new_nu)
+        new_state = FusedLambState(count, state.sched_count + adv,
+                                   new_mu, new_nu)
         if with_aux:
             return new_params, new_state, out[3]
         return new_params, new_state

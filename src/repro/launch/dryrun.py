@@ -59,12 +59,14 @@ def build_train(model, shape: InputShape, mesh, rules, optimizer: str,
 
     aparams = model.abstract_params()
     aopt = jax.eval_shape(opt.init, aparams)
-    astate = TrainState(aparams, aopt, jax.ShapeDtypeStruct((), jnp.int32))
+    counter = jax.ShapeDtypeStruct((), jnp.int32)
+    astate = TrainState(aparams, aopt, counter, counter)
     abatch = model.input_specs(shape)
 
     psh = shardings_for(model.defs, mesh, param_rules)
     osh = opt_state_shardings(aopt, psh, mesh)
-    ssh = TrainState(psh, osh, NamedSharding(mesh, P()))
+    ssh = TrainState(psh, osh, NamedSharding(mesh, P()),
+                     NamedSharding(mesh, P()))
     bsh = batch_shardings(abatch, mesh, rules)
 
     def wrapped(state, batch):

@@ -5,7 +5,9 @@
         [--mixed-batch] [--checkpoint-dir ckpt/] [--checkpoint-every 50] \
         [--async-checkpoint] [--resume] [--mesh data=8,model=1] \
         [--accum-steps 4] [--precision bf16] [--fused-lamb] [--fused-ce] \
-        [--telemetry-dir runs/x] [--log-trust-ratios]
+        [--telemetry-dir runs/x] [--log-trust-ratios] \
+        [--skip-nonfinite] [--rollback-on-spike --spike-window 32 \
+         --max-rollbacks 3] [--preempt-grace 30]
 
 ``--checkpoint-dir`` + ``--checkpoint-every`` persist the full train state
 (params, LAMB moments, step).  ``--async-checkpoint`` makes saves
@@ -42,12 +44,21 @@ docs/sharding.md).  With no ``--mesh``, multi-device hosts default to
 ``data=<all devices>`` (``--model-parallel`` is the legacy spelling for
 the model axis).
 
+Robustness (docs/reliability.md): ``--skip-nonfinite`` arms the in-jit
+non-finite guard (NaN/Inf in loss or grads skips the update in-graph);
+``--rollback-on-spike`` arms the loss-spike watchdog, which restores the
+last *validated* checkpoint on a trip and aborts with exit code 3 after
+``--max-rollbacks``; ``--preempt-grace N`` turns SIGTERM/SIGINT into a
+final checkpoint + clean ``status=preempted`` exit, resumable bit-exact
+with ``--resume``.
+
 ``--smoke`` swaps in the reduced config of the same family (CPU-runnable);
 the full configs are exercised via the dry-run (repro.launch.dryrun).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 from pathlib import Path
 
 import jax
@@ -60,7 +71,7 @@ from repro.data import DataPipeline
 from repro.launch.mesh import make_host_mesh, make_mesh_from_spec
 from repro.models import build_model
 from repro.telemetry import EventLog, RunReport
-from repro.train import Trainer
+from repro.train import DivergenceError, SupervisorConfig, Trainer
 
 
 def main() -> None:
@@ -116,6 +127,27 @@ def main() -> None:
                          "optimizer moments, step) and continue to --steps; "
                          "the data pipeline is fast-forwarded so the "
                          "continuation matches an uninterrupted run")
+    ap.add_argument("--skip-nonfinite", action="store_true",
+                    help="in-jit non-finite guard: any NaN/Inf in the loss "
+                         "or gradients skips the optimizer update (state "
+                         "passes through unchanged, schedule counters hold) "
+                         "and counts the step in TrainState.skipped")
+    ap.add_argument("--rollback-on-spike", action="store_true",
+                    help="loss-spike watchdog: robust (median+MAD) z-score "
+                         "over a trailing window; a trip restores the last "
+                         "validated checkpoint and fast-forwards the data "
+                         "stream past the suspect batches (requires "
+                         "--checkpoint-dir + --checkpoint-every)")
+    ap.add_argument("--spike-window", type=int, default=32,
+                    help="trailing-loss window size for the spike detector")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="rollback budget; exceeding it aborts with a "
+                         "divergence diagnostic (exit code 3)")
+    ap.add_argument("--preempt-grace", type=float, default=None,
+                    help="seconds: install a SIGTERM/SIGINT handler that "
+                         "finishes the current step, writes a final "
+                         "checkpoint (bounded by this grace window) and "
+                         "exits cleanly with status=preempted")
     ap.add_argument("--mesh", default="",
                     help="mesh axes, e.g. data=8,model=1 (uses the first "
                          "prod(sizes) local devices); params + LAMB moments "
@@ -131,6 +163,16 @@ def main() -> None:
         raise SystemExit(f"--accum-steps must be >= 1, got {args.accum_steps}")
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume requires --checkpoint-dir")
+    if args.rollback_on_spike and not (
+        args.checkpoint_dir and args.checkpoint_every
+    ):
+        raise SystemExit(
+            "--rollback-on-spike requires --checkpoint-dir and "
+            "--checkpoint-every (rollback needs a checkpoint to restore)"
+        )
+    if args.rollback_on_spike and args.mixed_batch:
+        raise SystemExit("--rollback-on-spike is not supported with "
+                         "--mixed-batch")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.flash is not None:
         cfg = cfg.replace(use_flash_kernel=args.flash)
@@ -169,6 +211,7 @@ def main() -> None:
         weight_decay=args.weight_decay, total_steps=args.steps, seed=args.seed,
         accum_steps=args.accum_steps, precision=args.precision,
         use_fused_lamb=args.fused_lamb,
+        skip_nonfinite=args.skip_nonfinite,
         log_trust_ratios=args.log_trust_ratios,
         # per-layer recording costs a host transfer per logged step — only
         # worth it when there is an event log to receive it
@@ -185,6 +228,12 @@ def main() -> None:
         resume=args.resume,
         log_every=args.log_every,
         telemetry=telemetry,
+        supervisor=(
+            SupervisorConfig(spike_window=args.spike_window,
+                             max_rollbacks=args.max_rollbacks)
+            if args.rollback_on_spike else None
+        ),
+        preempt_grace=args.preempt_grace,
     )
 
     if args.mixed_batch:
@@ -215,23 +264,37 @@ def main() -> None:
                     f"stage {st.name!r} batch {st.batch_size} is not "
                     f"divisible by the mesh's data-parallel size {dp}"
                 )
-        trainer.fit_stages(stages, data_seed=args.seed)
-    else:
-        data = DataPipeline(cfg, args.batch, args.seq, seed=args.seed,
-                            mesh=mesh)
-        trainer.fit(data, args.steps)
+    # the Trainer emits run_end (with status) from a finally, so the report
+    # is written even when the run aborts — a diverged run's RUN_REPORT is
+    # exactly the diagnostic artifact you want to inspect
+    exit_code = 0
+    try:
+        if args.mixed_batch:
+            trainer.fit_stages(stages, data_seed=args.seed)
+        else:
+            def make_data():
+                return DataPipeline(cfg, args.batch, args.seq,
+                                    seed=args.seed, mesh=mesh)
+
+            trainer.fit(make_data(), args.steps, data_factory=make_data)
+    except DivergenceError as e:
+        print(f"DIVERGED: {e}", file=sys.stderr)
+        for k, v in e.diagnostics.items():
+            print(f"  {k}: {v}", file=sys.stderr)
+        exit_code = 3
+    finally:
+        if telemetry.enabled:
+            report_path = Path(args.telemetry_dir) / "RUN_REPORT.json"
+            RunReport.from_events(telemetry.path).write(report_path)
+            print(f"telemetry: {telemetry.path} report: {report_path}")
 
     final = trainer.history[-1] if trainer.history else {}
-    print(f"done: step={final.get('step')} loss={final.get('loss/total'):.4f} "
-          f"acc={final.get('accuracy', 0.0):.4f}")
-
-    if telemetry.enabled:
-        telemetry.emit("run_end", status="ok",
-                       final_step=int(final.get("step", 0)),
-                       final_loss=float(final.get("loss/total", float("nan"))))
-        report_path = Path(args.telemetry_dir) / "RUN_REPORT.json"
-        RunReport.from_events(telemetry.path).write(report_path)
-        print(f"telemetry: {telemetry.path} report: {report_path}")
+    loss = final.get("loss/total")
+    print(f"done: step={final.get('step')} "
+          f"loss={'n/a' if loss is None else f'{loss:.4f}'} "
+          f"acc={final.get('accuracy', 0.0):.4f} status={trainer._status}")
+    if exit_code:
+        sys.exit(exit_code)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ batch composition under *any* batching scheme, including the static engine.
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -238,14 +239,23 @@ class ContinuousEngine:
 
         Invariant: admission is deferred to ``generate``'s loop — a
         submitted request holds no slot until the scheduler admits it.
-        Raises ValueError if the prompt is empty or the prompt+budget
-        cannot fit the pool's ``max_len``.
+        Raises ValueError if the prompt is empty, the prompt+budget cannot
+        fit the pool's ``max_len``, or the sampling params are malformed
+        (non-finite/negative temperature, negative top_k) — caught here so
+        a bad request fails loudly at submit instead of poisoning the
+        batched sampling arrays mid-decode.
         """
         if len(req.prompt) < 1:
             raise ValueError("prompt must hold at least one token")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (the prefill "
                              "always samples one token)")
+        if not math.isfinite(req.temperature) or req.temperature < 0:
+            raise ValueError(
+                f"temperature must be finite and >= 0, got {req.temperature}"
+            )
+        if req.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables), got {req.top_k}")
         # the last sampled token is returned but never written to the cache
         need = len(req.prompt) + req.max_new_tokens - 1
         if need > self.max_len:

@@ -60,6 +60,9 @@ class FCFSScheduler:
             raise ValueError("max_prefills_per_step must be >= 1")
         self.max_prefills_per_step = max_prefills_per_step
         self._queue: List[ServeRequest] = []
+        # arrival keys, kept parallel to _queue: queue_depth runs between
+        # every decode step, so it must not rebuild a key list per call
+        self._keys: List[Tuple[float, int]] = []
         self._next_rid = 0
 
     def submit(self, req: ServeRequest) -> ServeRequest:
@@ -71,8 +74,15 @@ class FCFSScheduler:
         if req.rid < 0:
             req.rid = self._next_rid
             self._next_rid += 1
-        bisect.insort(self._queue, req, key=lambda r: (r.arrival_s, r.rid))
+        key = (req.arrival_s, req.rid)
+        idx = bisect.bisect_left(self._keys, key)
+        self._keys.insert(idx, key)
+        self._queue.insert(idx, req)
         return req
+
+    def _pop_head(self) -> ServeRequest:
+        self._keys.pop(0)
+        return self._queue.pop(0)
 
     def has_pending(self) -> bool:
         """True while any request is still waiting (arrived or future)."""
@@ -86,10 +96,7 @@ class FCFSScheduler:
         """Requests that have *arrived* and are waiting for a slot at
         ``now`` (the telemetry counter — future arrivals don't count as
         queueing delay)."""
-        n = bisect.bisect_right(
-            [r.arrival_s for r in self._queue], now
-        )
-        return n
+        return bisect.bisect_right(self._keys, (now, float("inf")))
 
     def admit(
         self, now: float, free_slots: int
@@ -105,12 +112,12 @@ class FCFSScheduler:
             if (head.deadline_s is not None
                     and now > head.arrival_s + head.deadline_s):
                 head.dropped = True
-                dropped.append(self._queue.pop(0))
+                dropped.append(self._pop_head())
                 continue
             if budget <= 0:
                 break
             head.admitted_s = now
-            admitted.append(self._queue.pop(0))
+            admitted.append(self._pop_head())
             budget -= 1
         return admitted, dropped
 

@@ -44,7 +44,10 @@ EVENT_TYPES = frozenset({
     "serve_request",  # one request's lifecycle (incl. deadline drops)
     "serve_stats",    # aggregate serving stats for one generate() run
     "bench_result",   # one benchmark suite's result
-    "run_end",        # terminal event
+    "nonfinite_step", # in-jit guard skipped step(s): non-finite loss/grads
+    "rollback",       # supervisor restored an earlier checkpoint after a trip
+    "preempt",        # SIGTERM/SIGINT caught: grace-window save + clean stop
+    "run_end",        # terminal event (carries an explicit status)
 })
 
 # minimum payload per type; extra fields are allowed and preserved
@@ -59,6 +62,9 @@ REQUIRED_FIELDS: Dict[str, tuple] = {
     "serve_request": ("rid",),
     "serve_stats": (),
     "bench_result": ("name",),
+    "nonfinite_step": ("step", "count"),
+    "rollback": ("step", "from_step", "reason"),
+    "preempt": ("step", "signal"),
     "run_end": (),
 }
 

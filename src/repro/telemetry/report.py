@@ -106,6 +106,8 @@ class RunReport:
             end = by_type["run_end"][-1]
             report["run_end"] = {k: v for k, v in end.items()
                                  if k not in ("event", "seq")}
+            if "status" in end:
+                report["status"] = end["status"]
 
         steps = by_type.get("step", [])
         if steps:
@@ -189,6 +191,29 @@ class RunReport:
                         sum(float(ev["write_s"]) for ev in asyncs)),
                 }
             report["checkpoints"] = section
+
+        # fault tolerance: skip-step guard trips, supervisor rollbacks,
+        # preemption saves — the counts the acceptance harness asserts on
+        skips = by_type.get("nonfinite_step", [])
+        rollbacks = by_type.get("rollback", [])
+        preempts = by_type.get("preempt", [])
+        if skips or rollbacks or preempts:
+            ft: Dict[str, Any] = {
+                "skipped_steps": int(sum(int(ev.get("count", 1))
+                                         for ev in skips)),
+                "rollbacks": len(rollbacks),
+                "preempts": len(preempts),
+            }
+            if rollbacks:
+                last = rollbacks[-1]
+                ft["last_rollback"] = {
+                    "step": int(last["step"]),
+                    "from_step": int(last["from_step"]),
+                    "reason": last["reason"],
+                }
+            if preempts:
+                ft["last_preempt_step"] = int(preempts[-1]["step"])
+            report["fault_tolerance"] = ft
 
         resumes = by_type.get("resume", [])
         if resumes:

@@ -1,11 +1,34 @@
+from repro.train.faults import FaultInjector, FaultSpec
 from repro.train.loss import IGNORE, cross_entropy, lm_loss, loss_for, masked_prediction_loss
-from repro.train.step import TrainState, make_loss_fn, make_optimizer, make_train_step
+from repro.train.preempt import PreemptionHandler
+from repro.train.step import (
+    GUARD_KEY,
+    TrainState,
+    make_loss_fn,
+    make_optimizer,
+    make_train_step,
+    tree_all_finite,
+)
+from repro.train.supervisor import (
+    DivergenceError,
+    SpikeDetector,
+    SupervisorConfig,
+    TrainingSupervisor,
+)
 from repro.train.trainer import Trainer
 
 __all__ = [
+    "DivergenceError",
+    "FaultInjector",
+    "FaultSpec",
+    "GUARD_KEY",
     "IGNORE",
+    "PreemptionHandler",
+    "SpikeDetector",
+    "SupervisorConfig",
     "TrainState",
     "Trainer",
+    "TrainingSupervisor",
     "cross_entropy",
     "lm_loss",
     "loss_for",
@@ -13,4 +36,5 @@ __all__ = [
     "make_optimizer",
     "make_train_step",
     "masked_prediction_loss",
+    "tree_all_finite",
 ]

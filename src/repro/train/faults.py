@@ -1,0 +1,192 @@
+"""Deterministic numerical fault injection for the robustness harness.
+
+A :class:`FaultInjector` wraps a deterministic data iterator and stamps
+per-batch *fault channels* — extra ``fault/*`` leaves shaped ``(B,)`` so
+they slice and shard exactly like real batch leaves — keyed by **batch
+ordinal** (position in the stream), not by ``state.step``: with the
+skip-step guard on, a skipped step does not advance ``state.step``, so a
+step-keyed fault would re-fire forever.
+
+``make_train_step`` pops the channels out of the batch before the loss
+(see :func:`split_faults`) and applies them to the token-mean gradients
+in-jit (:func:`apply_grad_faults`):
+
+* ``grad_nan`` / ``grad_inf`` — overwrite every gradient leaf with
+  NaN/Inf, the exact signature of a poisoned microbatch; exercises the
+  non-finite guard's skip path.
+* ``grad_scale`` — multiply the gradients by a large factor.  The step
+  stays finite, so the guard passes and the *optimizer moments* are
+  corrupted (note LAMB's trust ratio bounds the parameter damage of any
+  one step to ~lr·‖p‖ — gradient scaling alone cannot spike the loss).
+* ``loss_spike`` — add ``scale`` to the reported ``loss/total`` metric
+  in-jit: the deterministic observable of a divergence, exactly what the
+  loss-spike supervisor watches.  Drives the rollback scenarios.
+* ``batch_nan`` — poison the first float leaf of the batch itself at
+  stamp time (host-side), upstream of the forward pass.
+
+Injection is pure state machine: the same spec list over the same stream
+produces the same stamps, and ``once`` semantics survive a rollback's
+data-pipeline rebuild (the fired-set lives on the injector, not the
+wrapped iterator).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_PREFIX = "fault/"
+GRAD_NAN_KEY = FAULT_PREFIX + "grad_nan"
+GRAD_INF_KEY = FAULT_PREFIX + "grad_inf"
+GRAD_SCALE_KEY = FAULT_PREFIX + "grad_scale"
+LOSS_SPIKE_KEY = FAULT_PREFIX + "loss_spike"
+
+KINDS = ("grad_nan", "grad_inf", "grad_scale", "loss_spike", "batch_nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault: ``kind`` at batch ordinal ``at`` (0-based).
+
+    ``at < 0`` fires on *every* batch (persistent fault — what drives the
+    max-rollback diagnostic abort).  ``once=True`` (default) fires a
+    non-negative ``at`` a single time even if the ordinal is replayed
+    after a rollback.  ``scale`` is the ``grad_scale`` multiplier.
+    """
+
+    kind: str
+    at: int
+    scale: float = 1e6
+    once: bool = True
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+
+
+class FaultInjector:
+    def __init__(self, faults: Iterable[FaultSpec]):
+        self.faults: Tuple[FaultSpec, ...] = tuple(faults)
+        self._fired: Dict[int, int] = {}
+
+    def _active(self, ordinal: int):
+        out = []
+        for idx, f in enumerate(self.faults):
+            if f.at >= 0 and f.at != ordinal:
+                continue
+            if f.at >= 0 and f.once and self._fired.get(idx, 0):
+                continue
+            self._fired[idx] = self._fired.get(idx, 0) + 1
+            out.append(f)
+        return out
+
+    def stamp(self, batch: Dict[str, Any], ordinal: int) -> Dict[str, Any]:
+        """Return ``batch`` plus the three grad-fault channels (always
+        present, so the jit'd step sees one constant pytree structure);
+        ``batch_nan`` faults poison the batch itself here instead."""
+        active = self._active(ordinal)
+        b = dict(batch)
+        n = int(jax.tree.leaves(batch)[0].shape[0])
+        nan_on = any(f.kind == "grad_nan" for f in active)
+        inf_on = any(f.kind == "grad_inf" for f in active)
+        scale = 1.0
+        spike = 0.0
+        for f in active:
+            if f.kind == "grad_scale":
+                scale *= f.scale
+            if f.kind == "loss_spike":
+                spike += f.scale
+        b[GRAD_NAN_KEY] = np.full((n,), 1.0 if nan_on else 0.0, np.float32)
+        b[GRAD_INF_KEY] = np.full((n,), 1.0 if inf_on else 0.0, np.float32)
+        b[GRAD_SCALE_KEY] = np.full((n,), scale, np.float32)
+        b[LOSS_SPIKE_KEY] = np.full((n,), spike, np.float32)
+        for f in active:
+            if f.kind != "batch_nan":
+                continue
+            poisoned = False
+            for key in sorted(batch):
+                leaf = np.asarray(batch[key])
+                if np.issubdtype(leaf.dtype, np.floating):
+                    leaf = leaf.copy()
+                    leaf.reshape(-1)[0] = np.nan
+                    b[key] = leaf
+                    poisoned = True
+                    break
+            if not poisoned:
+                raise ValueError(
+                    "batch_nan fault: batch has no float leaf to poison "
+                    f"(keys: {sorted(batch)})"
+                )
+        return b
+
+    def wrap(self, data: Iterator[Dict[str, Any]]) -> Iterator[Dict[str, Any]]:
+        """Yield ``data``'s batches with fault channels stamped; ordinals
+        restart at 0 per wrapped stream (matching a rebuilt pipeline's
+        fast-forward), while fired-once state persists across wraps."""
+
+        def gen():
+            for ordinal, batch in enumerate(data):
+                yield self.stamp(batch, ordinal)
+
+        return gen()
+
+
+def split_faults(batch) -> Tuple[Any, Dict[str, jnp.ndarray]]:
+    """Pop the ``fault/*`` channels out of a batch (jit-safe: structure is
+    static).  Returns ``(clean_batch, faults)``; unfaulted batches pass
+    through untouched with an empty dict."""
+    if not isinstance(batch, dict) or not any(
+        k.startswith(FAULT_PREFIX) for k in batch
+    ):
+        return batch, {}
+    clean = {k: v for k, v in batch.items() if not k.startswith(FAULT_PREFIX)}
+    faults = {k: v for k, v in batch.items() if k.startswith(FAULT_PREFIX)}
+    return clean, faults
+
+
+def apply_grad_faults(grads, faults: Dict[str, jnp.ndarray]):
+    """Apply stamped fault channels to the gradient pytree (in-jit).
+
+    The ``(B,)`` channels are reduced to scalars first (a global reduce
+    under GSPMD, so every shard agrees), then broadcast over every leaf.
+    """
+    if not faults:
+        return grads
+    scale = faults.get(GRAD_SCALE_KEY)
+    if scale is not None:
+        s = jnp.max(scale.astype(jnp.float32))
+        grads = jax.tree.map(
+            lambda g: (g.astype(jnp.float32) * s).astype(g.dtype), grads
+        )
+    for key, bad in ((GRAD_NAN_KEY, jnp.nan), (GRAD_INF_KEY, jnp.inf)):
+        chan = faults.get(key)
+        if chan is not None:
+            on = jnp.max(chan.astype(jnp.float32)) > 0
+            grads = jax.tree.map(
+                lambda g, _on=on, _bad=bad: jnp.where(
+                    _on, jnp.asarray(_bad, g.dtype), g
+                ),
+                grads,
+            )
+    return grads
+
+
+def apply_loss_faults(metrics: Dict[str, Any],
+                      faults: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
+    """Add any stamped ``loss_spike`` magnitude to the loss metric (in-jit).
+
+    The spike rides the *observed* channel only — parameters and gradients
+    are untouched — so a detector trip, the rollback, and the post-rollback
+    recovery are all exercised deterministically.
+    """
+    chan = faults.get(LOSS_SPIKE_KEY)
+    if chan is None or "loss/total" not in metrics:
+        return metrics
+    metrics = dict(metrics)
+    metrics["loss/total"] = (
+        metrics["loss/total"] + jnp.max(chan.astype(jnp.float32))
+    )
+    return metrics

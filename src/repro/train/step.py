@@ -41,17 +41,48 @@ from repro.kernels import (
 )
 from repro.models.api import Model
 from repro.telemetry.trust import PER_LAYER_KEY
+from repro.train.faults import (
+    apply_grad_faults,
+    apply_loss_faults,
+    split_faults,
+)
 from repro.train.loss import check_fused_ce_supported, loss_for
 
 # Metric key carrying each microbatch's supervised-token count (set by the
 # loss functions); drives token-weighted accumulation below.
 TOKEN_WEIGHT_KEY = "tokens/supervised"
 
+# Metric key the non-finite guard reports under: 1.0 when the step was
+# skipped (state passed through unchanged), 0.0 otherwise.  Only present
+# with ``tc.skip_nonfinite``.
+GUARD_KEY = "nonfinite/skip"
+
+LOSS_KEY = "loss/total"
+
 
 class TrainState(NamedTuple):
     params: Any
     opt_state: Any
     step: jnp.ndarray
+    # cumulative non-finite-guard skips; persisted with the checkpoint so a
+    # resume can fast-forward the data stream by step + skipped *batches*
+    # (a skipped step consumed a batch without advancing ``step``)
+    skipped: jnp.ndarray
+
+
+def tree_all_finite(tree, *extra) -> jnp.ndarray:
+    """One fused all-finite reduction over a pytree (+ extra leaves).
+
+    Returns a scalar bool.  Under GSPMD the per-leaf ``jnp.all`` reductions
+    stay *global* — sharded leaves contribute collectives, so every device
+    agrees on the verdict (required: the skip select must be uniform).
+    Integer leaves are finite by definition (``jnp.isfinite`` handles them).
+    """
+    leaves = list(jax.tree.leaves(tree)) + [x for x in extra if x is not None]
+    if not leaves:
+        return jnp.asarray(True)
+    oks = [jnp.all(jnp.isfinite(x)) for x in leaves]
+    return jnp.all(jnp.stack(oks)) if len(oks) > 1 else oks[0]
 
 
 def _wants_fused(model: Model, tc: TrainConfig) -> bool:
@@ -252,13 +283,25 @@ def make_train_step(
             return params
         return nn.cast_tree(params, jnp.dtype(compute_dtype))
 
+    guard = tc.skip_nonfinite
+
     def grads_and_metrics(params, batch):
+        # fault channels (tests/harness) ride the batch as fault/* leaves;
+        # pop them before the loss sees the batch, apply to the grads after
+        # accumulation — so a poisoned gradient looks exactly like a real
+        # non-finite microbatch to the guard below
+        batch, faults = split_faults(batch)
         grads, metrics = _microbatch_grads(
             loss_fn, cast_params(params), batch, n_micro
         )
-        metrics = dict(metrics)
+        grads = apply_grad_faults(grads, faults)
+        metrics = apply_loss_faults(dict(metrics), faults)
         metrics["grad_norm"] = _global_norm(grads)
         return grads, metrics
+
+    def finite_guard(grads, metrics):
+        """Scalar ok-flag: everything the update would consume is finite."""
+        return tree_all_finite(grads, metrics.get(LOSS_KEY))
 
     def trust_diag(params, updates):
         return core.summarize_trust_ratios(
@@ -295,12 +338,21 @@ def make_train_step(
         def init_fn(rng) -> TrainState:
             params = model.init(rng)
             return TrainState(
-                params, fused_lamb_init(params), jnp.zeros([], jnp.int32)
+                params, fused_lamb_init(params), jnp.zeros([], jnp.int32),
+                jnp.zeros([], jnp.int32),
             )
 
         def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
             grads, metrics = grads_and_metrics(state.params, batch)
-            out = fused_step(state.params, grads, state.opt_state)
+            if guard:
+                # the guard threads through the fused apply: every leaf
+                # where-selects old vs new in the same fused expression and
+                # the moment/schedule counters advance by ok, so a skipped
+                # step leaves the entire opt state bit-identical
+                ok = finite_guard(grads, metrics)
+                out = fused_step(state.params, grads, state.opt_state, ok=ok)
+            else:
+                out = fused_step(state.params, grads, state.opt_state)
             params, opt_state = out[0], out[1]
             # same metric schema as the unfused path; the subtraction fuses
             # into the norm reduction (no materialized delta tree)
@@ -318,7 +370,18 @@ def make_train_step(
                     metrics[PER_LAYER_KEY] = per_layer_records(
                         state.params, updates, applied_ratio=out[2]
                     )
-            return TrainState(params, opt_state, state.step + 1), metrics
+            if guard:
+                adv = ok.astype(jnp.int32)
+                metrics[GUARD_KEY] = 1.0 - adv.astype(jnp.float32)
+                new_state = TrainState(
+                    params, opt_state, state.step + adv,
+                    state.skipped + (1 - adv),
+                )
+            else:
+                new_state = TrainState(
+                    params, opt_state, state.step + 1, state.skipped
+                )
+            return new_state, metrics
 
         return init_fn, step_fn
 
@@ -330,13 +393,27 @@ def make_train_step(
 
     def init_fn(rng) -> TrainState:
         params = model.init(rng)
-        return TrainState(params, opt.init(params), jnp.zeros([], jnp.int32))
+        return TrainState(params, opt.init(params), jnp.zeros([], jnp.int32),
+                          jnp.zeros([], jnp.int32))
 
     def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         grads, metrics = grads_and_metrics(state.params, batch)
         updates, opt_state = opt.update(grads, state.opt_state, state.params)
         params = optim.apply_updates(state.params, updates)
-        metrics["update_norm"] = _global_norm(updates)
+        if guard:
+            # tree.map(where) select at the TrainState level: a non-finite
+            # step passes params AND the whole transform-chain state through
+            # unchanged — schedule counters included, since ScheduleState
+            # lives inside opt_state
+            ok = finite_guard(grads, metrics)
+            keep = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+            params = jax.tree.map(keep, params, state.params)
+            opt_state = jax.tree.map(keep, opt_state, state.opt_state)
+            adv = ok.astype(jnp.int32)
+            metrics["update_norm"] = jnp.where(ok, _global_norm(updates), 0.0)
+            metrics[GUARD_KEY] = 1.0 - adv.astype(jnp.float32)
+        else:
+            metrics["update_norm"] = _global_norm(updates)
         if tc.log_trust_ratios:
             metrics.update(trust_diag(state.params, updates))
         if record:
@@ -344,7 +421,13 @@ def make_train_step(
             # post-hoc phi(||x||)/||Δx|| diagnostic (same semantics as
             # trust_diag, per layer instead of summarized)
             metrics[PER_LAYER_KEY] = per_layer_records(state.params, updates)
-        return TrainState(params, opt_state, state.step + 1), metrics
+        if guard:
+            new_state = TrainState(params, opt_state, state.step + adv,
+                                   state.skipped + (1 - adv))
+        else:
+            new_state = TrainState(params, opt_state, state.step + 1,
+                                   state.skipped)
+        return new_state, metrics
 
     return init_fn, step_fn
 

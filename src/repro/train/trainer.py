@@ -38,6 +38,7 @@ import numpy as np
 from repro.checkpoint import (
     AsyncCheckpointer,
     checkpoint_step,
+    discard_checkpoints_after,
     latest_checkpoint,
     restore_checkpoint,
     save_checkpoint,
@@ -58,7 +59,18 @@ from repro.telemetry import (
     run_provenance,
 )
 from repro.telemetry.trust import PER_LAYER_KEY
-from repro.train.step import TrainState, make_optimizer, make_train_step
+from repro.train.preempt import PreemptionHandler
+from repro.train.step import (
+    LOSS_KEY,
+    TrainState,
+    make_optimizer,
+    make_train_step,
+)
+from repro.train.supervisor import (
+    DivergenceError,
+    SupervisorConfig,
+    TrainingSupervisor,
+)
 
 
 def _batch_examples(batch) -> int:
@@ -105,6 +117,8 @@ class Trainer:
         log_every: int = 10,
         log_fn: Callable[[str], None] = print,
         telemetry: Optional[EventLog] = None,
+        supervisor: Optional[SupervisorConfig] = None,
+        preempt_grace: Optional[float] = None,
     ):
         self.model = model
         self.tc = train_cfg
@@ -120,6 +134,15 @@ class Trainer:
         self.async_checkpoint = async_checkpoint
         self.resume = resume
         self._checkpointer: Optional[AsyncCheckpointer] = None
+        # loss-spike watchdog: a fresh TrainingSupervisor is built per fit
+        # from this config (rollback counts must not leak across fits)
+        self.supervisor_cfg = supervisor
+        # preemption: not None installs a SIGTERM/SIGINT handler around the
+        # fit loop; the value bounds (seconds) the final-save drain wait
+        self.preempt_grace = preempt_grace
+        self._last_saved_step: Optional[int] = None
+        self._skipped_seen = 0
+        self._status = "ok"
         self.log_every = log_every
         self.log = log_fn
         # telemetry: a null EventLog unless the caller wires a real sink;
@@ -270,8 +293,16 @@ class Trainer:
     def _save_checkpoint(self) -> None:
         """Persist the FULL TrainState — params, optimizer moments and the
         step counter.  A params-only save silently restarts optimization on
-        resume: LAMB's m/v moments and the schedule position are state."""
+        resume: LAMB's m/v moments and the schedule position are state.
+
+        Same-step re-saves are dropped: with the non-finite guard, skipped
+        steps can make two cadence points (or cadence + preemption) land on
+        one ``state.step`` — the state is identical, the write is not free.
+        """
         step = int(self.state.step)
+        if step == self._last_saved_step:
+            return
+        self._last_saved_step = step
         if self.async_checkpoint:
             self.checkpointer.save(step, self.state)
             return
@@ -282,11 +313,12 @@ class Trainer:
             write_s=time.perf_counter() - t0,
         )
 
-    def _drain_checkpoints(self) -> None:
+    def _drain_checkpoints(self, timeout: Optional[float] = None) -> None:
         """Block until the in-flight async write (if any) is durable, so a
-        returned ``fit`` implies every scheduled checkpoint is on disk."""
+        returned ``fit`` implies every scheduled checkpoint is on disk.
+        ``timeout`` bounds the wait (the preemption grace window)."""
         if self._checkpointer is not None:
-            self._checkpointer.wait()
+            self._checkpointer.wait(timeout)
 
     def restore(self, path: Optional[str] = None) -> Optional[int]:
         """Restore the full TrainState from ``path`` (default: the latest
@@ -312,32 +344,77 @@ class Trainer:
 
     def _maybe_resume(self, data, steps: int) -> int:
         """With ``resume=True``, restore the latest checkpoint and return
-        the step to continue from (0 when none exists).  The deterministic
-        data iterator is fast-forwarded past the batches the original run
-        already consumed, so the resumed run sees exactly the sequence an
-        uninterrupted run would — the bit-exact-continuation contract the
-        preemption harness asserts."""
+        the batch ordinal to continue from (0 when none exists).  The
+        deterministic data iterator is fast-forwarded past the batches the
+        original run already consumed — ``step + skipped``, since a
+        guard-skipped step consumed a batch without advancing ``step`` —
+        so the resumed run sees exactly the sequence an uninterrupted run
+        would: the bit-exact-continuation contract the preemption harness
+        asserts."""
         if not self.resume:
             return 0
         step = self.restore()
         if step is None:
             return 0
-        start = min(step, steps)
+        self._last_saved_step = step
+        start = min(step + int(self.state.skipped), steps)
         for _ in range(start):
             self.examples_seen += _batch_examples(next(data))
         return start
 
     # ------------------------------------------------------------------
-    def fit(self, data, steps: int) -> List[Dict[str, float]]:
+    def fit(self, data, steps: int, *,
+            data_factory: Optional[Callable[[], Any]] = None
+            ) -> List[Dict[str, float]]:
+        """Run the step loop to ``steps`` batches.
+
+        ``data_factory`` (a zero-arg callable rebuilding the deterministic
+        iterator ``data`` came from) enables supervisor rollback: on a trip
+        the Trainer restores the last validated checkpoint, rebuilds the
+        stream, and fast-forwards *past* the suspect batch window.  A
+        ``run_end`` event with an explicit status (``ok`` / ``failed`` /
+        ``preempted`` / ``diverged``) is emitted from a ``finally`` so
+        crashed runs still close their event log.
+        """
+        if data is None and data_factory is not None:
+            data = data_factory()
         start = self._maybe_resume(data, steps)
         if self.state is None:
             self.init()
         self._emit_run_start()
+        supervisor = (TrainingSupervisor(self.supervisor_cfg)
+                      if self.supervisor_cfg is not None else None)
+        self._status = "ok"
+        try:
+            with PreemptionHandler(
+                enabled=self.preempt_grace is not None
+            ) as preempt:
+                self._fit_loop(data, steps, start, supervisor, preempt,
+                               data_factory)
+            self._drain_checkpoints()
+        except BaseException as e:
+            self._status = ("diverged" if isinstance(e, DivergenceError)
+                            else "failed")
+            raise
+        finally:
+            self._emit_run_end(supervisor)
+        return self.history
+
+    def _fit_loop(self, data, steps: int, start: int,
+                  supervisor: Optional[TrainingSupervisor],
+                  preempt: PreemptionHandler,
+                  data_factory: Optional[Callable[[], Any]]) -> None:
         telem = self.telemetry.enabled
+        guard_on = self.tc.skip_nonfinite
         t0 = time.perf_counter()
         since_log = 0
+        self._skipped_seen = int(self.state.skipped) if guard_on else 0
+        # i is the batch ordinal (stream position), not state.step: a
+        # guard-skipped step consumes a batch without advancing step, and
+        # the two counters must not be conflated in the loop bookkeeping
+        i = start
         with use_sharding(self.shard_ctx):
-            for i in range(start, steps):
+            while i < steps:
                 if telem and since_log == 0:
                     # span boundary: drain prior work so the interval times
                     # only its own steps (async dispatch would otherwise
@@ -347,6 +424,31 @@ class Trainer:
                 self.examples_seen += _batch_examples(batch)
                 self.state, metrics = self._step_fn(self.state, batch)
                 since_log += 1
+                if supervisor is not None:
+                    # the watchdog's cost: one blocking host fetch per step
+                    loss_d, step_d, skip_d = jax.device_get(
+                        (metrics.get(LOSS_KEY), self.state.step,
+                         self.state.skipped))
+                    loss = float("nan") if loss_d is None else float(loss_d)
+                    step_now, skipped_now = int(step_d), int(skip_d)
+                    delta = skipped_now - self._skipped_seen
+                    self._skipped_seen = skipped_now
+                    if delta > 0:
+                        self.telemetry.emit(
+                            "nonfinite_step", step=step_now, count=delta,
+                            total=skipped_now,
+                            consecutive=supervisor.consecutive_skips + 1,
+                        )
+                        self.log(f"non-finite step skipped at batch {i} "
+                                 f"(total skipped {skipped_now})")
+                    reason = supervisor.observe(step_now, loss, skipped_now)
+                    if reason is not None:
+                        i, data = self._rollback(
+                            reason, supervisor, i, steps, step_now,
+                            data_factory,
+                        )
+                        since_log = 0
+                        continue
                 if (i + 1) % self.log_every == 0 or i == steps - 1:
                     m, per_layer = self._host_metrics(metrics)
                     step_s = (
@@ -357,6 +459,17 @@ class Trainer:
                     m["step"] = int(self.state.step)
                     m["examples_seen"] = self.examples_seen
                     m["wall_s"] = time.perf_counter() - t0
+                    if guard_on:
+                        skipped_now = int(self.state.skipped)
+                        m["skipped_total"] = skipped_now
+                        if supervisor is None:
+                            if skipped_now > self._skipped_seen:
+                                self.telemetry.emit(
+                                    "nonfinite_step", step=m["step"],
+                                    count=skipped_now - self._skipped_seen,
+                                    total=skipped_now,
+                                )
+                            self._skipped_seen = skipped_now
                     self.history.append(m)
                     self.log(
                         f"step {m['step']:6d} loss {m.get('loss/total', 0.0):.4f} "
@@ -371,8 +484,103 @@ class Trainer:
                     and (i + 1) % self.checkpoint_every == 0
                 ):
                     self._save_checkpoint()
+                i += 1
+                if preempt.triggered:
+                    self._handle_preempt(preempt)
+                    self._status = "preempted"
+                    break
+
+    # ------------------------------------------------------------------
+    def _rollback(self, reason: str, supervisor: TrainingSupervisor,
+                  i: int, steps: int, trip_step: int,
+                  data_factory: Optional[Callable[[], Any]]):
+        """Restore the last validated checkpoint and fast-forward the data
+        stream past the suspect window.  Returns ``(next_i, new_data)``.
+
+        Resuming the stream at ``i + 1`` — not at the restored step — is
+        the re-poisoning guard: the batches between the restored checkpoint
+        and the trip (the window that contained the poison) are consumed
+        untrained, so even a deterministic persistent fault at one ordinal
+        can never hit the rolled-back run twice.
+        """
+        diag = supervisor.diagnostics(reason)
+        self.log(f"supervisor trip: {reason} at batch {i} "
+                 f"(step {trip_step}, last_good {supervisor.last_good})")
+        supervisor.note_rollback(reason)  # raises DivergenceError past budget
+        if not self.checkpoint_dir or data_factory is None:
+            raise DivergenceError(
+                f"diverged ({reason}): rollback needs checkpoint_dir and a "
+                "data_factory", diag,
+            )
         self._drain_checkpoints()
-        return self.history
+        bound = supervisor.last_good
+        path = (latest_checkpoint(self.checkpoint_dir, max_step=bound)
+                if bound >= 0 else None)
+        if path is None:
+            raise DivergenceError(
+                f"diverged ({reason}) before any validated checkpoint "
+                f"(last_good step {bound})", diag,
+            )
+        restored_step = self.restore(path)
+        removed = discard_checkpoints_after(self.checkpoint_dir,
+                                            restored_step)
+        self._last_saved_step = restored_step
+        restored_skipped = int(self.state.skipped)
+        restored_i = restored_step + restored_skipped
+        resume_i = i + 1
+        data = data_factory()
+        for _ in range(resume_i):
+            next(data)  # already consumed pre-trip; examples_seen unchanged
+        self.telemetry.emit(
+            "rollback", step=restored_step, from_step=trip_step,
+            reason=reason, batches_dropped=resume_i - restored_i,
+            rollbacks=supervisor.rollbacks, discarded=len(removed),
+        )
+        supervisor.after_rollback(restored_skipped)
+        self._skipped_seen = restored_skipped
+        self.log(f"rollback {supervisor.rollbacks}: restored step "
+                 f"{restored_step}, dropped batches "
+                 f"[{restored_i}, {resume_i}), resuming at batch {resume_i}")
+        return resume_i, data
+
+    def _handle_preempt(self, preempt: PreemptionHandler) -> None:
+        """Grace-window final save: persist the current full TrainState
+        through the existing checkpointer, bounded by ``preempt_grace``."""
+        step = int(self.state.step)
+        saved = False
+        if self.checkpoint_dir:
+            self._save_checkpoint()
+            if self.async_checkpoint:
+                self._drain_checkpoints(timeout=self.preempt_grace)
+                saved = (self._checkpointer is not None
+                         and self._checkpointer.latest_persisted_step()
+                         == step)
+            else:
+                saved = True
+        self.telemetry.emit(
+            "preempt", step=step, signal=preempt.signal_name, saved=saved,
+            grace_s=float(self.preempt_grace or 0.0),
+        )
+        self.log(f"preempted ({preempt.signal_name}): step {step} "
+                 f"saved={saved}; stopping cleanly")
+
+    def _emit_run_end(self, supervisor: Optional[TrainingSupervisor] = None
+                      ) -> None:
+        if not self.telemetry.enabled:
+            return
+        fields: Dict[str, Any] = {"status": self._status}
+        try:
+            if self.state is not None:
+                fields["final_step"] = int(self.state.step)
+                fields["skipped_steps"] = int(self.state.skipped)
+        except Exception:
+            pass  # state may be donated/deleted when aborting mid-step
+        if self.history:
+            fields["final_loss"] = float(
+                self.history[-1].get(LOSS_KEY, float("nan")))
+        if supervisor is not None:
+            fields["rollbacks"] = supervisor.rollbacks
+        self.telemetry.emit("run_end", **fields)
 
     # ------------------------------------------------------------------
     def fit_stages(
@@ -382,6 +590,18 @@ class Trainer:
         if self.state is None:
             self.init()
         self._emit_run_start()
+        self._status = "ok"
+        try:
+            self._fit_stages(stages, data_seed=data_seed)
+        except BaseException as e:
+            self._status = ("diverged" if isinstance(e, DivergenceError)
+                            else "failed")
+            raise
+        finally:
+            self._emit_run_end()
+        return self.history
+
+    def _fit_stages(self, stages: Sequence[Stage], *, data_seed: int) -> None:
         telem = self.telemetry.enabled
         # one wall clock across all stages, so fit_stages history rows carry
         # the same ``wall_s`` field as fit's and stay comparable
@@ -413,6 +633,7 @@ class Trainer:
                     self.state.params,
                     _reset_schedule_counts(self.state.opt_state),
                     self.state.step,
+                    self.state.skipped,
                 )
             data = DataPipeline(
                 self.model.cfg, stage.batch_size, stage.seq_len, seed=data_seed + si
@@ -445,4 +666,3 @@ class Trainer:
                         if telem:
                             self._log_step(m, per_layer, step_s, since_log)
                         since_log = 0
-        return self.history

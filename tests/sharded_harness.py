@@ -28,13 +28,26 @@ Prints one JSON object on the last stdout line.  Scenarios:
   memory        per-device param+optimizer bytes: FSDP vs unsharded, live
                 arrays + compiled per-device argument sizes
   guards        clear errors for non-divisible batches
+  nan_skip      in-jit non-finite guard under GSPMD: a NaN-injected batch is
+                skipped in-graph (global reduction — every device agrees)
+                and the final params are BITWISE equal to a clean run whose
+                stream simply omits the poisoned ordinal; both meshes
+  spike_rollback  loss-spike watchdog on a mesh: an injected spike trips the
+                supervisor, the last validated checkpoint is restored, the
+                stream fast-forwards past the suspect window, and the run
+                completes with finite loss; both meshes
+  sigterm_resume  SIGTERM preemption: a victim gets SIGTERM mid-run, writes
+                a final checkpoint inside the grace window, exits rc=0 with
+                status=preempted, and a --resume run continues bit-exact vs
+                an uninterrupted reference (data=8)
 
-The ``--victim`` mode is the nested training run the crash_resume scenario
-kills and resumes:
+The ``--victim`` mode is the nested training run the crash_resume /
+sigterm_resume scenarios kill (or signal) and resume:
 
     python tests/sharded_harness.py --victim --ckpt-dir D --steps 8 \
         --every 2 --mesh data=8,model=1 [--resume] [--out hist.json] \
-        [--kill-after-batches 5 | --kill-at-save 2:3] [--sync-checkpoint]
+        [--kill-after-batches 5 | --kill-at-save 2:3] [--sync-checkpoint] \
+        [--term-after-batches 5 --preempt-grace 30] [--skip-nonfinite]
 """
 import argparse
 import json
@@ -65,7 +78,13 @@ from repro.data import DataPipeline  # noqa: E402
 from repro.launch.mesh import make_mesh_from_spec  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.sharding import shardings_for, train_state_shardings  # noqa: E402
-from repro.train import Trainer  # noqa: E402
+from repro.telemetry import EventLog  # noqa: E402
+from repro.train import (  # noqa: E402
+    FaultInjector,
+    FaultSpec,
+    SupervisorConfig,
+    Trainer,
+)
 from repro.train.step import make_train_step  # noqa: E402
 
 TINY = ModelConfig(
@@ -217,6 +236,18 @@ def _kill_after_batches(data, n: int):
         yield next(data)
 
 
+def _term_after_batches(data, n: int):
+    """Send the process SIGTERM once, when the ``n``-th batch is requested,
+    then keep serving — the *graceful* preemption: the handler sets a flag,
+    the in-flight step finishes, the Trainer saves and stops cleanly."""
+    served = 0
+    while True:
+        if served == n:
+            os.kill(os.getpid(), signal.SIGTERM)
+        served += 1
+        yield next(data)
+
+
 def _arm_mid_save_kill(save_idx: int, leaf_idx: int) -> None:
     """SIGKILL during the ``save_idx``-th checkpoint write of this process,
     once ``leaf_idx`` leaves are on disk — i.e. mid-save, before the atomic
@@ -245,6 +276,9 @@ def victim(argv) -> None:
     ap.add_argument("--sync-checkpoint", action="store_true")
     ap.add_argument("--kill-after-batches", type=int, default=None)
     ap.add_argument("--kill-at-save", default=None, metavar="SAVE:LEAF")
+    ap.add_argument("--term-after-batches", type=int, default=None)
+    ap.add_argument("--preempt-grace", type=float, default=None)
+    ap.add_argument("--skip-nonfinite", action="store_true")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
@@ -252,22 +286,28 @@ def victim(argv) -> None:
         save_idx, leaf_idx = (int(x) for x in args.kill_at_save.split(":"))
         _arm_mid_save_kill(save_idx, leaf_idx)
 
-    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True,
+                     skip_nonfinite=args.skip_nonfinite)
     mesh = make_mesh_from_spec(args.mesh)
     tr = Trainer(
         build_model(TINY), tc, mesh=mesh,
         checkpoint_dir=args.ckpt_dir or None, checkpoint_every=args.every,
         async_checkpoint=not args.sync_checkpoint, resume=args.resume,
+        preempt_grace=args.preempt_grace,
         log_every=1, log_fn=lambda s: None,
     )
     data = DataPipeline(TINY, BATCH, SEQ, seed=0, mesh=mesh)
     if args.kill_after_batches is not None:
         data = _kill_after_batches(data, args.kill_after_batches)
+    if args.term_after_batches is not None:
+        data = _term_after_batches(data, args.term_after_batches)
     tr.fit(data, args.steps)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"history": tr.history,
                        "final_step": int(tr.state.step),
+                       "skipped": int(tr.state.skipped),
+                       "status": tr._status,
                        "examples_seen": tr.examples_seen}, f)
 
 
@@ -376,6 +416,133 @@ def scenario_crash_resume(steps=8, every=2):
     return results
 
 
+# ---------------------------------------------------------------------------
+# numerical faults: skip-step guard, loss-spike rollback, SIGTERM preemption
+# ---------------------------------------------------------------------------
+
+def _drop_ordinal(data, k: int):
+    """Yield ``data``'s batches with the ``k``-th one silently omitted —
+    the reference stream a guard-skipped run must match exactly."""
+    for i, batch in enumerate(data):
+        if i != k:
+            yield batch
+
+
+def scenario_nan_skip(steps=6, poison_at=2):
+    """Guard equivalence under GSPMD: a NaN-injected run with the guard on
+    must land BITWISE on the params of a clean run whose stream omits the
+    poisoned ordinal (the skipped step must be a true no-op, and the
+    all-finite verdict must be globally uniform across devices)."""
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True,
+                     skip_nonfinite=True)
+    out = {}
+    for spec in MESHES:
+        mesh = make_mesh_from_spec(spec)
+        model = build_model(TINY)
+
+        inj = FaultInjector([FaultSpec("grad_nan", at=poison_at)])
+        tr = Trainer(model, tc, mesh=mesh, log_every=1000, log_fn=lambda s: None)
+        tr.fit(inj.wrap(DataPipeline(TINY, BATCH, SEQ, seed=0, mesh=mesh)),
+               steps)
+
+        clean = Trainer(model, tc, mesh=mesh, log_every=1000,
+                        log_fn=lambda s: None)
+        clean.fit(_drop_ordinal(DataPipeline(TINY, BATCH, SEQ, seed=0,
+                                             mesh=mesh), poison_at),
+                  steps - 1)
+
+        out[spec] = {
+            "skipped": int(tr.state.skipped),
+            "final_step": int(tr.state.step),
+            "param_maxdiff": _maxdiff(tr.state.params, clean.state.params),
+            "moment_maxdiff": _maxdiff(tr.state.opt_state.mu,
+                                       clean.state.opt_state.mu),
+            "steps_match": int(tr.state.step) == int(clean.state.step),
+        }
+    return out
+
+
+def scenario_spike_rollback(steps=10, every=2, spike_at=5):
+    """Watchdog end-to-end on a mesh: injected loss spike -> supervisor trip
+    -> restore last validated checkpoint -> fast-forward past the suspect
+    window -> finish with finite loss.  The rollback event carries the
+    restore arithmetic the report aggregates."""
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3, use_fused_lamb=True)
+    out = {}
+    for spec in MESHES:
+        mesh = make_mesh_from_spec(spec)
+        model = build_model(TINY)
+        inj = FaultInjector([FaultSpec("loss_spike", at=spike_at, scale=100.0)])
+        log = EventLog.memory()
+        with tempfile.TemporaryDirectory() as ckpt:
+            def make_data():
+                return inj.wrap(DataPipeline(TINY, BATCH, SEQ, seed=0,
+                                             mesh=mesh))
+
+            tr = Trainer(model, tc, mesh=mesh, checkpoint_dir=ckpt,
+                         checkpoint_every=every,
+                         supervisor=SupervisorConfig(spike_window=8,
+                                                     min_history=3),
+                         telemetry=log, log_every=1, log_fn=lambda s: None)
+            tr.fit(make_data(), steps, data_factory=make_data)
+        rollbacks = [e for e in log.events if e["event"] == "rollback"]
+        end = [e for e in log.events if e["event"] == "run_end"][-1]
+        dropped = sum(e["batches_dropped"] for e in rollbacks)
+        out[spec] = {
+            "rollbacks": len(rollbacks),
+            "reason": rollbacks[0]["reason"] if rollbacks else None,
+            "restored_step": rollbacks[0]["step"] if rollbacks else None,
+            "from_step": rollbacks[0]["from_step"] if rollbacks else None,
+            "final_step": int(tr.state.step),
+            # every batch is either trained or explicitly dropped
+            "step_arithmetic_ok": int(tr.state.step) == steps - dropped,
+            "final_loss": tr.history[-1]["loss/total"],
+            "final_loss_finite": bool(
+                np.isfinite(tr.history[-1]["loss/total"])),
+            "status": end["status"],
+        }
+    return out
+
+
+def scenario_sigterm_resume(steps=8, every=3, term_at=5):
+    """Graceful preemption on data=8: SIGTERM mid-run -> grace-window final
+    save -> clean exit (rc=0, status=preempted) -> --resume continues
+    bit-exact vs an uninterrupted reference."""
+    mesh = MESHES[0]
+    with tempfile.TemporaryDirectory() as root:
+        ref_json = os.path.join(root, "ref.json")
+        _run_victim("--steps", steps, "--mesh", mesh, "--out", ref_json)
+        with open(ref_json) as f:
+            ref = json.load(f)
+
+        ckpt = os.path.join(root, "ckpt")
+        pre_json = os.path.join(root, "pre.json")
+        _run_victim("--ckpt-dir", ckpt, "--steps", steps, "--every", every,
+                    "--mesh", mesh, "--term-after-batches", term_at,
+                    "--preempt-grace", 60, "--out", pre_json)
+        with open(pre_json) as f:
+            pre = json.load(f)
+        latest = checkpoint_step(latest_checkpoint(ckpt))
+
+        res_json = os.path.join(root, "res.json")
+        _run_victim("--ckpt-dir", ckpt, "--steps", steps, "--every", every,
+                    "--mesh", mesh, "--resume", "--out", res_json)
+        with open(res_json) as f:
+            res = json.load(f)
+        rows = _history_rows(res, latest)
+        ref_rows = _history_rows(ref, latest)
+        return {
+            "preempt_status": pre["status"],
+            "preempt_final_step": pre["final_step"],
+            "stopped_early": pre["final_step"] < steps,
+            "saved_at_preempt_step": latest == pre["final_step"],
+            "resumed_rows": len(rows),
+            "bitexact": rows == ref_rows,
+            "final_step": res["final_step"],
+            "resume_status": res["status"],
+        }
+
+
 def scenario_memory():
     from repro.sharding import per_device_state_bytes
 
@@ -440,6 +607,9 @@ SCENARIOS = {
     "stages": scenario_stages,
     "checkpoint": scenario_checkpoint,
     "crash_resume": scenario_crash_resume,
+    "nan_skip": scenario_nan_skip,
+    "spike_rollback": scenario_spike_rollback,
+    "sigterm_resume": scenario_sigterm_resume,
     "memory": scenario_memory,
     "guards": scenario_guards,
 }

@@ -1,0 +1,526 @@
+"""Numerical fault tolerance: skip-step guard, spike watchdog, preemption.
+
+Property tests (hypothesis) pin the spike detector's two-sided contract —
+no false trips on stationary noisy loss, guaranteed trips on genuine
+spikes — and unit/integration tests drive the in-jit guard, the rollback
+supervisor and the SIGTERM preemption path end-to-end on a single device
+(the sharded variants live in tests/sharded_harness.py).
+"""
+import math
+import os
+import signal
+
+import pytest
+
+try:  # property tests run under hypothesis when present; the deterministic
+    import hypothesis  # grid versions below always run either way
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="hypothesis not installed (see requirements-dev.txt)",
+)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import (  # noqa: E402
+    checkpoint_step,
+    discard_checkpoints_after,
+    latest_checkpoint,
+    save_checkpoint,
+)
+from repro.configs.base import TrainConfig  # noqa: E402
+from repro.data import DataPipeline  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.telemetry import EventLog  # noqa: E402
+from repro.train import (  # noqa: E402
+    DivergenceError,
+    FaultInjector,
+    FaultSpec,
+    PreemptionHandler,
+    SpikeDetector,
+    SupervisorConfig,
+    Trainer,
+    TrainingSupervisor,
+    tree_all_finite,
+)
+from repro.train.faults import FAULT_PREFIX, split_faults  # noqa: E402
+from repro.train.step import GUARD_KEY, make_train_step  # noqa: E402
+from tests.conftest import tiny_dense  # noqa: E402
+
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile(
+        "repro_ft", deadline=None, max_examples=25, derandomize=True,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow],
+    )
+    hypothesis.settings.load_profile("repro_ft")
+
+BATCH, SEQ = 8, 16
+
+
+def _fresh_detector():
+    return SpikeDetector(window=32, zmax=8.0, min_history=8, min_rel_jump=0.5)
+
+
+# ---------------------------------------------------------------------------
+# spike detector properties
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @hypothesis.given(
+        base=st.floats(0.5, 10.0, allow_nan=False, allow_subnormal=False),
+        noise=st.lists(
+            st.floats(-0.1, 0.1, allow_nan=False, allow_subnormal=False),
+            min_size=20, max_size=80,
+        ),
+    )
+    def test_detector_never_trips_on_stationary_noise(base, noise):
+        """Loss wobbling within ±10% of a stationary level must never trip:
+        the relative-jump gate requires a spike of at least min_rel_jump
+        relative to the window median."""
+        det = _fresh_detector()
+        for eps in noise:
+            assert not det.observe(base * (1.0 + eps))
+
+    @needs_hypothesis
+    @hypothesis.given(
+        base=st.floats(0.5, 10.0, allow_nan=False, allow_subnormal=False),
+        noise=st.lists(
+            st.floats(-0.05, 0.05, allow_nan=False, allow_subnormal=False),
+            min_size=12, max_size=40,
+        ),
+        factor=st.floats(10.0, 1e4, allow_nan=False, allow_subnormal=False),
+    )
+    def test_detector_always_trips_on_spike(base, noise, factor):
+        """A >=10x excursion after a settled window must always trip (both
+        the z-score and the relative-jump gate clear by construction)."""
+        det = _fresh_detector()
+        for eps in noise:
+            det.observe(base * (1.0 + eps))
+        assert det.observe(base * factor)
+
+
+@pytest.mark.parametrize("base", [0.5, 1.0, 2.7, 10.0])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_detector_never_trips_on_stationary_noise_grid(base, seed):
+    """Deterministic version of the no-false-trip property (always runs)."""
+    rng = np.random.default_rng(seed)
+    det = _fresh_detector()
+    for eps in rng.uniform(-0.1, 0.1, size=60):
+        assert not det.observe(base * (1.0 + float(eps)))
+
+
+@pytest.mark.parametrize("base", [0.5, 1.0, 2.7, 10.0])
+@pytest.mark.parametrize("factor", [10.0, 100.0, 1e4])
+def test_detector_always_trips_on_spike_grid(base, factor):
+    """Deterministic version of the guaranteed-trip property (always runs)."""
+    rng = np.random.default_rng(0)
+    det = _fresh_detector()
+    for eps in rng.uniform(-0.05, 0.05, size=20):
+        det.observe(base * (1.0 + float(eps)))
+    assert det.observe(base * factor)
+
+
+@pytest.mark.parametrize("base", [0.5, 2.7, 10.0])
+@pytest.mark.parametrize(
+    "bad", [float("nan"), float("inf"), float("-inf")]
+)
+def test_detector_trips_on_nonfinite_loss(base, bad):
+    det = _fresh_detector()
+    for _ in range(12):
+        det.observe(base)
+    assert det.observe(bad)
+
+
+def test_detector_spike_not_fed_into_window():
+    """A tripping observation must not poison the baseline: the next equal
+    spike still trips (otherwise one spike would raise the median and mask
+    its successors)."""
+    det = _fresh_detector()
+    for _ in range(12):
+        det.observe(1.0)
+    assert det.observe(50.0)
+    assert det.observe(50.0)
+
+
+def test_detector_constant_window_zero_mad():
+    """An exactly constant window (MAD=0) must not trip on a microscopic
+    wobble — the relative-jump AND-gate, not the epsilon floor, holds."""
+    det = _fresh_detector()
+    for _ in range(12):
+        det.observe(2.0)
+    assert not det.observe(2.0 + 1e-6)
+    assert det.observe(50.0)
+
+
+# ---------------------------------------------------------------------------
+# in-jit non-finite guard: skip-step state identity
+# ---------------------------------------------------------------------------
+
+def _one_step(tc, batch):
+    model = build_model(tiny_dense())
+    init_fn, step_fn = make_train_step(model, tc)
+    state = jax.jit(init_fn)(jax.random.key(0))
+    return model, jax.jit(step_fn), state, batch
+
+
+def _poisoned(batch, kind="grad_nan"):
+    inj = FaultInjector([FaultSpec(kind, at=0)])
+    return inj.stamp(dict(batch), 0)
+
+
+VARIANTS = {
+    "unfused": dict(),
+    "fused": dict(use_fused_lamb=True),
+    "accum2": dict(accum_steps=2),
+    "bf16": dict(precision="bf16"),
+}
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+@pytest.mark.parametrize("kind", ["grad_nan", "grad_inf"])
+def test_skip_step_leaves_state_bit_identical(variant, kind):
+    """A poisoned step with the guard on must be a true no-op: every param
+    and optimizer leaf bitwise unchanged, step not advanced, skipped+1."""
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3,
+                     skip_nonfinite=True, **VARIANTS[variant])
+    data = DataPipeline(tiny_dense(), BATCH, SEQ, seed=0)
+    model, step, state, batch = _one_step(tc, next(data))
+    before = jax.tree.map(np.asarray, state)
+
+    new_state, metrics = step(state, _poisoned(batch, kind))
+
+    assert float(metrics[GUARD_KEY]) == 1.0
+    assert int(new_state.step) == 0
+    assert int(new_state.skipped) == 1
+    for p, b in zip(jax.tree.leaves(new_state.params),
+                    jax.tree.leaves(before.params)):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(b))
+    for p, b in zip(jax.tree.leaves(new_state.opt_state),
+                    jax.tree.leaves(before.opt_state)):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(b))
+
+
+@pytest.mark.parametrize("variant", ["unfused", "fused"])
+def test_clean_step_advances_normally_with_guard(variant):
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3,
+                     skip_nonfinite=True, **VARIANTS[variant])
+    data = DataPipeline(tiny_dense(), BATCH, SEQ, seed=0)
+    _, step, state, batch = _one_step(tc, next(data))
+    new_state, metrics = step(state, batch)
+    assert float(metrics[GUARD_KEY]) == 0.0
+    assert int(new_state.step) == 1
+    assert int(new_state.skipped) == 0
+
+
+def test_guard_off_propagates_nan():
+    """Contrast: without the guard a poisoned gradient corrupts params —
+    the failure mode the guard exists to stop."""
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    data = DataPipeline(tiny_dense(), BATCH, SEQ, seed=0)
+    _, step, state, batch = _one_step(tc, next(data))
+    new_state, _ = step(state, _poisoned(batch, "grad_nan"))
+    finite = bool(tree_all_finite(new_state.params))
+    assert not finite
+
+
+def test_nan_skip_matches_dropped_ordinal_run():
+    """Single-device version of the harness gate: injected-and-skipped ==
+    clean run whose stream omits the poisoned batch, bitwise."""
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3,
+                     skip_nonfinite=True)
+    cfg = tiny_dense()
+    model = build_model(cfg)
+    inj = FaultInjector([FaultSpec("grad_nan", at=1)])
+
+    tr = Trainer(model, tc, log_every=1000, log_fn=lambda s: None)
+    tr.fit(inj.wrap(DataPipeline(cfg, BATCH, SEQ, seed=0)), 4)
+
+    def drop(data, k):
+        for i, b in enumerate(data):
+            if i != k:
+                yield b
+
+    clean = Trainer(model, tc, log_every=1000, log_fn=lambda s: None)
+    clean.fit(drop(DataPipeline(cfg, BATCH, SEQ, seed=0), 1), 3)
+
+    assert int(tr.state.skipped) == 1
+    assert int(tr.state.step) == int(clean.state.step) == 3
+    for a, b in zip(jax.tree.leaves(tr.state.params),
+                    jax.tree.leaves(clean.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fault_channels_do_not_leak_into_loss():
+    """The fault/* channels must be popped before the loss ever sees the
+    batch: a stamped-but-inactive batch trains bit-identically to a clean
+    one."""
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3,
+                     skip_nonfinite=True)
+    data = DataPipeline(tiny_dense(), BATCH, SEQ, seed=0)
+    _, step, state, batch = _one_step(tc, next(data))
+    inj = FaultInjector([FaultSpec("grad_nan", at=99)])  # never fires here
+    s1, m1 = step(state, inj.stamp(dict(batch), 0))
+
+    _, step2, state2, _ = _one_step(tc, batch)
+    s2, m2 = step2(state2, batch)
+    assert float(m1["loss/total"]) == float(m2["loss/total"])
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fault injector determinism
+# ---------------------------------------------------------------------------
+
+def test_injector_is_deterministic_and_once():
+    spec = [FaultSpec("grad_nan", at=2), FaultSpec("grad_inf", at=-1,
+                                                   once=False)]
+    batches = [{"x": np.zeros((4,), np.float32)} for _ in range(4)]
+
+    inj = FaultInjector(spec)
+    first = [inj.stamp(dict(b), i) for i, b in enumerate(batches)]
+    nan_chan = [float(b[FAULT_PREFIX + "grad_nan"][0]) for b in first]
+    inf_chan = [float(b[FAULT_PREFIX + "grad_inf"][0]) for b in first]
+    assert nan_chan == [0.0, 0.0, 1.0, 0.0]
+    assert inf_chan == [1.0, 1.0, 1.0, 1.0]  # at<0 fires every batch
+
+    # once=True survives a rollback's stream rebuild: replaying ordinal 2
+    # through the SAME injector must not re-fire
+    replay = inj.stamp(dict(batches[2]), 2)
+    assert float(replay[FAULT_PREFIX + "grad_nan"][0]) == 0.0
+
+    # a fresh injector with the same specs reproduces the same stamps
+    inj2 = FaultInjector(spec)
+    again = [inj2.stamp(dict(b), i) for i, b in enumerate(batches)]
+    assert [float(b[FAULT_PREFIX + "grad_nan"][0]) for b in again] == nan_chan
+
+
+def test_injector_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("grad_zero", at=0)
+
+
+def test_split_faults_passthrough():
+    clean = {"tokens": np.zeros((2, 4), np.int32)}
+    b, f = split_faults(clean)
+    assert b is clean and f == {}
+    stamped = dict(clean)
+    stamped[FAULT_PREFIX + "grad_nan"] = np.ones((2,), np.float32)
+    b, f = split_faults(stamped)
+    assert set(b) == {"tokens"} and set(f) == {FAULT_PREFIX + "grad_nan"}
+
+
+# ---------------------------------------------------------------------------
+# supervisor semantics
+# ---------------------------------------------------------------------------
+
+def test_supervisor_validates_checkpoints_lazily():
+    """A healthy loss at step s validates step s-1 (the loss was computed
+    on pre-update params) — never the step whose update it preceded."""
+    sup = TrainingSupervisor(SupervisorConfig(min_history=2))
+    assert sup.last_good == -1
+    assert sup.observe(1, 1.0, 0) is None
+    assert sup.last_good == 0
+    assert sup.observe(5, 1.0, 0) is None
+    assert sup.last_good == 4
+
+
+def test_supervisor_trips_on_nonfinite_loss():
+    sup = TrainingSupervisor(SupervisorConfig())
+    assert sup.observe(1, float("nan"), 0) == "nonfinite_loss"
+
+
+def test_supervisor_consecutive_skip_budget():
+    sup = TrainingSupervisor(SupervisorConfig(skip_budget=3))
+    assert sup.observe(1, 1.0, 1) is None
+    assert sup.observe(1, 1.0, 2) is None
+    assert sup.observe(1, 1.0, 3) == "nonfinite_budget"
+    # a healthy step resets the streak
+    sup2 = TrainingSupervisor(SupervisorConfig(skip_budget=3))
+    sup2.observe(1, 1.0, 1)
+    sup2.observe(1, 1.0, 2)
+    sup2.observe(2, 1.0, 2)  # no new skip
+    assert sup2.observe(2, 1.0, 3) is None
+
+
+def test_supervisor_rollback_budget_raises():
+    sup = TrainingSupervisor(SupervisorConfig(max_rollbacks=2))
+    sup.note_rollback("loss_spike")
+    sup.note_rollback("loss_spike")
+    with pytest.raises(DivergenceError) as ei:
+        sup.note_rollback("loss_spike")
+    assert ei.value.diagnostics["rollbacks"] == 3
+
+
+def test_trainer_rolls_back_on_spike(tmp_path):
+    cfg = tiny_dense()
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    inj = FaultInjector([FaultSpec("loss_spike", at=5, scale=100.0)])
+
+    def make_data():
+        return inj.wrap(DataPipeline(cfg, BATCH, SEQ, seed=0))
+
+    log = EventLog.memory()
+    tr = Trainer(build_model(cfg), tc, checkpoint_dir=str(tmp_path),
+                 checkpoint_every=2,
+                 supervisor=SupervisorConfig(spike_window=8, min_history=3),
+                 telemetry=log, log_every=1, log_fn=lambda s: None)
+    hist = tr.fit(make_data(), 10, data_factory=make_data)
+
+    rollbacks = [e for e in log.events if e["event"] == "rollback"]
+    assert len(rollbacks) == 1
+    rb = rollbacks[0]
+    assert rb["reason"] == "loss_spike"
+    assert rb["step"] < rb["from_step"]
+    # every batch is either trained or explicitly dropped by the rollback
+    assert int(tr.state.step) == 10 - rb["batches_dropped"]
+    assert math.isfinite(hist[-1]["loss/total"])
+    end = [e for e in log.events if e["event"] == "run_end"][-1]
+    assert end["status"] == "ok" and end["rollbacks"] == 1
+
+
+def test_trainer_aborts_after_max_rollbacks(tmp_path):
+    """Repeated spikes past the budget end in a DivergenceError with a
+    diagnostic payload and status=diverged — never a silent loop."""
+    cfg = tiny_dense()
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    # second spike placed min_history past the first rollback's resume
+    # point, so the re-armed detector has a settled window when it hits
+    inj = FaultInjector([FaultSpec("loss_spike", at=5, scale=100.0),
+                         FaultSpec("loss_spike", at=9, scale=100.0)])
+
+    def make_data():
+        return inj.wrap(DataPipeline(cfg, BATCH, SEQ, seed=0))
+
+    log = EventLog.memory()
+    tr = Trainer(build_model(cfg), tc, checkpoint_dir=str(tmp_path),
+                 checkpoint_every=2,
+                 supervisor=SupervisorConfig(spike_window=8, min_history=3,
+                                             max_rollbacks=1),
+                 telemetry=log, log_every=1, log_fn=lambda s: None)
+    with pytest.raises(DivergenceError) as ei:
+        tr.fit(make_data(), 14, data_factory=make_data)
+    assert ei.value.diagnostics["reason"] == "loss_spike"
+    end = [e for e in log.events if e["event"] == "run_end"][-1]
+    assert end["status"] == "diverged"
+
+
+def test_rollback_without_checkpoint_dir_raises():
+    cfg = tiny_dense()
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+    inj = FaultInjector([FaultSpec("loss_spike", at=5, scale=100.0)])
+
+    def make_data():
+        return inj.wrap(DataPipeline(cfg, BATCH, SEQ, seed=0))
+
+    tr = Trainer(build_model(cfg), tc,
+                 supervisor=SupervisorConfig(spike_window=8, min_history=3),
+                 log_every=1000, log_fn=lambda s: None)
+    with pytest.raises(DivergenceError, match="checkpoint_dir"):
+        tr.fit(make_data(), 10, data_factory=make_data)
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+def test_preemption_handler_sets_flag_once():
+    with PreemptionHandler(enabled=True, signals=(signal.SIGTERM,)) as h:
+        assert not h.triggered
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert h.triggered
+        assert h.signal_name == "SIGTERM"
+        # a second delivery escalates instead of waiting another grace
+        with pytest.raises(KeyboardInterrupt):
+            os.kill(os.getpid(), signal.SIGTERM)
+    # handlers restored on exit: SIGTERM outside the context is default
+
+
+def test_preemption_handler_disabled_is_noop():
+    with PreemptionHandler(enabled=False) as h:
+        assert not h.triggered
+
+
+def test_trainer_preempts_and_resumes_bit_exact(tmp_path):
+    cfg = tiny_dense()
+    tc = TrainConfig(optimizer="lamb", learning_rate=1e-3)
+
+    class TermAfter:
+        def __init__(self, inner, n):
+            self.inner, self.n, self.i = inner, n, 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            if self.i == self.n:
+                os.kill(os.getpid(), signal.SIGTERM)
+            self.i += 1
+            return next(self.inner)
+
+    log = EventLog.memory()
+    tr = Trainer(build_model(cfg), tc, checkpoint_dir=str(tmp_path),
+                 checkpoint_every=100, preempt_grace=30.0, telemetry=log,
+                 log_every=1, log_fn=lambda s: None)
+    tr.fit(TermAfter(DataPipeline(cfg, BATCH, SEQ, seed=0), 4), 12)
+
+    pe = [e for e in log.events if e["event"] == "preempt"][-1]
+    end = [e for e in log.events if e["event"] == "run_end"][-1]
+    assert end["status"] == "preempted"
+    assert pe["saved"] and pe["signal"] == "SIGTERM"
+    stopped_at = int(tr.state.step)
+    assert stopped_at < 12
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == stopped_at
+
+    resumed = Trainer(build_model(cfg), tc, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=100, resume=True,
+                      log_every=1, log_fn=lambda s: None)
+    h2 = resumed.fit(DataPipeline(cfg, BATCH, SEQ, seed=0), 12)
+
+    ref = Trainer(build_model(cfg), tc, log_every=1, log_fn=lambda s: None)
+    h3 = ref.fit(DataPipeline(cfg, BATCH, SEQ, seed=0), 12)
+    tail2 = [{k: v for k, v in r.items() if k != "wall_s"}
+             for r in h2 if r["step"] > stopped_at]
+    tail3 = [{k: v for k, v in r.items() if k != "wall_s"}
+             for r in h3 if r["step"] > stopped_at]
+    assert tail2 and tail2 == tail3
+
+
+# ---------------------------------------------------------------------------
+# checkpoint rollback plumbing
+# ---------------------------------------------------------------------------
+
+def test_latest_checkpoint_max_step_bound(tmp_path):
+    d = str(tmp_path)
+    for s in (2, 4, 6):
+        save_checkpoint(d, s, {"x": np.full((2,), s, np.float32)})
+    assert checkpoint_step(latest_checkpoint(d)) == 6
+    assert checkpoint_step(latest_checkpoint(d, max_step=5)) == 4
+    assert checkpoint_step(latest_checkpoint(d, max_step=4)) == 4
+    assert latest_checkpoint(d, max_step=1) is None
+
+
+def test_discard_checkpoints_after(tmp_path):
+    d = str(tmp_path)
+    for s in (2, 4, 6):
+        save_checkpoint(d, s, {"x": np.full((2,), s, np.float32)})
+    removed = discard_checkpoints_after(d, 4)
+    assert removed == ["step_00000006"]
+    # LATEST re-pointed at the newest survivor — a later --resume must
+    # never see the invalidated (possibly poisoned) checkpoint
+    assert checkpoint_step(latest_checkpoint(d)) == 4
+    assert discard_checkpoints_after(d, 10) == []
+
+
+def test_discard_all_checkpoints_clears_latest(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 3, {"x": np.zeros((2,), np.float32)})
+    discard_checkpoints_after(d, 0)
+    assert latest_checkpoint(d) is None

@@ -219,6 +219,27 @@ def test_scheduler_deadline_drop():
     assert admitted == [kept] and dropped == [late] and late.dropped
 
 
+def test_queue_depth_counts_only_arrived_requests():
+    """queue_depth(now) must track the sorted queue incrementally — counting
+    only requests with arrival_s <= now — through out-of-order submits and
+    interleaved admissions."""
+    sched = FCFSScheduler(max_prefills_per_step=1)
+    for t in (0.3, 0.1, 0.2, 5.0):
+        sched.submit(ServeRequest(np.zeros(4, np.int32), arrival_s=t))
+    assert sched.queue_depth(0.0) == 0
+    assert sched.queue_depth(0.15) == 1
+    assert sched.queue_depth(0.3) == 3      # boundary: arrival_s == now counts
+    assert sched.queue_depth(1.0) == 3      # the t=5.0 request hasn't arrived
+    admitted, _ = sched.admit(now=1.0, free_slots=4)
+    assert [r.arrival_s for r in admitted] == [0.1]
+    assert sched.queue_depth(1.0) == 2      # keys popped alongside the queue
+    sched.submit(ServeRequest(np.zeros(4, np.int32), arrival_s=0.05))
+    assert sched.queue_depth(1.0) == 3      # late submit lands mid-queue
+    admitted, _ = sched.admit(now=1.0, free_slots=4)
+    assert [r.arrival_s for r in admitted] == [0.05]  # still FCFS by arrival
+    assert sched.queue_depth(10.0) == 3
+
+
 def test_arrival_processes():
     t = poisson_arrivals(16, rate=10.0, seed=0)
     assert len(t) == 16 and t[0] == 0.0 and np.all(np.diff(t) >= 0)
@@ -234,3 +255,18 @@ def test_engine_enforces_pool_capacity(served):
     ce = ContinuousEngine(model, params, n_slots=1, max_len=16)
     with pytest.raises(ValueError):
         ce.submit(ServeRequest(np.zeros(10, np.int32), max_new_tokens=10))
+
+
+def test_engine_rejects_bad_sampling_params(served):
+    """submit() validates sampling params up front — a NaN temperature or a
+    negative top_k must fail at submission, not poison a decode step."""
+    model, params = served
+    ce = ContinuousEngine(model, params, n_slots=2, max_len=16)
+    for bad in (float("nan"), float("inf"), -0.5):
+        with pytest.raises(ValueError, match="temperature"):
+            ce.submit(ServeRequest(np.zeros(4, np.int32), temperature=bad))
+    with pytest.raises(ValueError, match="top_k"):
+        ce.submit(ServeRequest(np.zeros(4, np.int32), top_k=-1))
+    # the boundary values stay legal: greedy and disabled-top_k
+    ce.submit(ServeRequest(np.zeros(4, np.int32), max_new_tokens=4,
+                           temperature=0.0, top_k=0))

@@ -132,6 +132,52 @@ def test_resume_garbage_collects_tmp_dirs(report, case):
     assert res["final_latest_step"] == 8, res
 
 
+# ---------------------------------------------------------------------------
+# numerical faults & preemption (nan_skip / spike_rollback / sigterm_resume)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh", ["data=8,model=1", "data=4,model=2"])
+def test_nan_skip_matches_clean_run_bitwise(report, mesh):
+    """With the non-finite guard on, a NaN-poisoned batch is skipped
+    in-graph: params AND moments must be BITWISE equal to a run whose
+    stream omits that ordinal — the skip verdict is a global reduction,
+    so every device agrees and the select is a true no-op."""
+    entry = report["nan_skip"][mesh]
+    assert entry["skipped"] == 1, entry
+    assert entry["param_maxdiff"] == 0.0, entry
+    assert entry["moment_maxdiff"] == 0.0, entry
+    assert entry["steps_match"], entry
+
+
+@pytest.mark.parametrize("mesh", ["data=8,model=1", "data=4,model=2"])
+def test_spike_rollback_recovers(report, mesh):
+    """An injected loss spike trips the watchdog: exactly one rollback to
+    the last validated checkpoint, the suspect window is dropped (step
+    arithmetic proves no batch is silently retrained), and the run ends
+    ok with finite loss."""
+    entry = report["spike_rollback"][mesh]
+    assert entry["rollbacks"] == 1, entry
+    assert entry["reason"] == "loss_spike", entry
+    assert entry["restored_step"] < entry["from_step"], entry
+    assert entry["step_arithmetic_ok"], entry
+    assert entry["final_loss_finite"], entry
+    assert entry["status"] == "ok", entry
+
+
+def test_sigterm_preemption_resumes_bit_exact(report):
+    """SIGTERM mid-run: the victim saves inside the grace window, exits
+    cleanly with status=preempted, and a --resume run continues BIT-EXACT
+    vs an uninterrupted reference."""
+    entry = report["sigterm_resume"]
+    assert entry["preempt_status"] == "preempted", entry
+    assert entry["stopped_early"], entry
+    assert entry["saved_at_preempt_step"], entry
+    assert entry["resumed_rows"] > 0, entry
+    assert entry["bitexact"], entry
+    assert entry["final_step"] == 8, entry
+    assert entry["resume_status"] == "ok", entry
+
+
 def test_fsdp_shrinks_per_device_state_memory(report):
     """Params + LAMB moments per device must shrink ≥4× under data=8 FSDP
     (measured ~8× — replicated scalars keep it from exactly N×)."""
