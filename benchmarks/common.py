@@ -9,22 +9,10 @@ is the *shape* of the paper's claims, not absolute F1.
 """
 from __future__ import annotations
 
-import itertools
-import time
-from typing import Dict, List, Optional
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import core
 from repro.configs.bert_large import tiny as bert_tiny
-from repro.configs.base import TrainConfig
-from repro.data import make_batch
-from repro.data.synthetic import SyntheticLM
-from repro.models import build_model
 from repro.telemetry import run_provenance
-from repro.train import Trainer
 
 
 def provenance_header(timestamp: float, *, mesh=None) -> Dict:
@@ -55,53 +43,17 @@ def fixed_epoch_steps(total_tokens: int, batch: int, seq: int) -> int:
     return max(total_tokens // (batch * seq), 2)
 
 
-def train_once(
-    cfg,
-    *,
-    optimizer: str,
-    batch: int,
-    seq: int,
-    steps: int,
-    lr: float,
-    warmup_ratio: float,
-    seed: int = 0,
-    eval_batches: int = 4,
-    weight_decay: float = 0.01,
-) -> Dict[str, float]:
-    """Train and return final train loss + held-out eval loss/accuracy."""
-    model = build_model(cfg)
-    warmup = max(int(round(warmup_ratio * steps)), 1)
-    sched = core.warmup_poly_decay(lr, steps, warmup)
-    tc = TrainConfig(optimizer=optimizer, learning_rate=lr,
-                     weight_decay=weight_decay, seed=seed)
-    tr = Trainer(model, tc, schedule=sched, log_every=max(steps // 4, 1),
-                 log_fn=lambda s: None)
+def train_once(cfg, **kw) -> Dict[str, float]:
+    """Train and return final train loss + held-out eval loss/accuracy.
 
-    src = SyntheticLM(cfg.vocab_size, seed=1)
-    rngs = (np.random.default_rng((seed, i)) for i in itertools.count())
-    data = (make_batch(cfg, next(rngs), batch, seq, src) for _ in itertools.count())
-    t0 = time.perf_counter()
-    hist = tr.fit(data, steps)
-    wall = time.perf_counter() - t0
+    Forwards to :func:`benchmarks.protocol.train_once`, so every table bench
+    runs the full fused production path (flash attention, fused CE head,
+    fused LAMB) — see that module for the extra knobs (accum_steps,
+    precision, target_loss) and the ``history`` trajectory it adds.
+    """
+    from benchmarks.protocol import train_once as _protocol_train_once
 
-    # held-out eval (fresh seed stream)
-    from repro.train.step import make_loss_fn
-
-    loss_fn = jax.jit(make_loss_fn(model))
-    eval_rng = np.random.default_rng(10_000 + seed)
-    losses, accs = [], []
-    for _ in range(eval_batches):
-        b = jax.tree.map(jnp.asarray, make_batch(cfg, eval_rng, batch, seq, src))
-        l, m = loss_fn(tr.state.params, b)
-        losses.append(float(l))
-        accs.append(float(m["accuracy"]))
-    return {
-        "train_loss": hist[-1]["loss/total"],
-        "eval_loss": float(np.mean(losses)),
-        "eval_acc": float(np.mean(accs)),
-        "steps": steps,
-        "wall_s": wall,
-    }
+    return _protocol_train_once(cfg, **kw)
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import importlib.util
+import inspect
 import pathlib
 import sys
 import time
@@ -34,10 +35,14 @@ SUITES = [
     ("table2", "benchmarks.table2_lamb_vs_lars", "Table 2 LAMB vs LARS"),
     ("mixed_batch", "benchmarks.mixed_batch_bench", "§4.1 mixed-batch + re-warmup"),
     ("table3", "benchmarks.table3_optimizer_comparison", "Table 3 tuned baselines"),
+    ("convergence", "benchmarks.convergence_bench",
+     "steps-to-target vs global batch (fused stack, LAMB/LANS/tuned AdamW)"),
 ]
 
+# convergence stays in FAST via its own --fast tier (suites whose run()
+# takes a ``fast`` kwarg get it forwarded below)
 FAST = {"table4", "roofline", "opt_step", "attention", "train_step", "sharding",
-        "scaling"}
+        "scaling", "convergence"}
 
 
 def main() -> None:
@@ -63,7 +68,10 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(module, fromlist=["run"])
-            rows = list(mod.run())
+            kwargs = {}
+            if args.fast and "fast" in inspect.signature(mod.run).parameters:
+                kwargs["fast"] = True
+            rows = list(mod.run(**kwargs))
             for row in rows:
                 print(row, flush=True)
             log.emit("bench_result", name=key, desc=desc, ok=True,

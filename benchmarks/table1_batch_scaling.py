@@ -16,13 +16,13 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro import core
-from benchmarks.common import bert_cpu, csv_row, fixed_epoch_steps, train_once
+from benchmarks.common import bert_cpu, csv_row, fixed_epoch_steps
+from benchmarks.protocol import recipe, train_once
 
 SEQ = 32
 BASE_BATCH = 16
 TOKENS = BASE_BATCH * SEQ * 600
-RECIPE = {"lamb": 6e-3, "adamw": 1e-3}
+OPTIMIZERS = ("lamb", "adamw")
 
 
 def _cfg():
@@ -32,19 +32,20 @@ def _cfg():
 def run(batches=(16, 64)) -> List[str]:
     cfg = _cfg()
     rows, results = [], {}
-    for opt, base_lr in RECIPE.items():
+    for opt in OPTIMIZERS:
         for b in batches:
             steps = fixed_epoch_steps(TOKENS, b, SEQ)
-            lr = core.sqrt_scaled_lr(base_lr, BASE_BATCH, b)
-            wr = core.linear_epoch_warmup_ratio(1 / 40, BASE_BATCH, b)
+            r = recipe(opt, b, base_batch=BASE_BATCH)
             t0 = time.perf_counter()
             out = train_once(cfg, optimizer=opt, batch=b, seq=SEQ,
-                             steps=steps, lr=lr, warmup_ratio=wr)
+                             steps=steps, lr=r["lr"],
+                             warmup_ratio=r["warmup_ratio"])
             us = (time.perf_counter() - t0) / max(steps, 1) * 1e6
             results[(opt, b)] = out
             rows.append(csv_row(
                 f"table1/{opt}_batch{b}", us,
-                f"steps={steps};lr={lr:.2e};eval_loss={out['eval_loss']:.4f};"
+                f"steps={steps};lr={r['lr']:.2e};"
+                f"eval_loss={out['eval_loss']:.4f};"
                 f"eval_acc={out['eval_acc']:.4f}",
             ))
     # Paper App. H: "validation loss is not reliable ... we use accuracy" —
@@ -52,7 +53,7 @@ def run(batches=(16, 64)) -> List[str]:
     small, big = batches[0], batches[-1]
     deg = {
         opt: results[(opt, small)]["eval_acc"] - results[(opt, big)]["eval_acc"]
-        for opt in RECIPE
+        for opt in OPTIMIZERS
     }
     rows.append(csv_row(
         "table1/claim_lamb_scales_better_than_adamw", 0.0,

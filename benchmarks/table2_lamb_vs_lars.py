@@ -9,13 +9,13 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro import core
-from benchmarks.common import bert_nano, csv_row, fixed_epoch_steps, train_once
+from benchmarks.common import bert_nano, csv_row, fixed_epoch_steps
+from benchmarks.protocol import recipe, train_once
 
 SEQ = 32
 BASE_BATCH = 16
 TOKENS = BASE_BATCH * SEQ * 400
-BASE = {"lamb": 6e-3, "lars": 0.3}  # LARS needs layerwise-SGD-scale LR
+# LARS's base LR (0.3, layerwise-SGD scale) comes from protocol.UNTUNED_BASE_LR
 
 
 def run(batches=(16, 64)) -> List[str]:
@@ -24,11 +24,11 @@ def run(batches=(16, 64)) -> List[str]:
     for opt in ("lamb", "lars"):
         for b in batches:
             steps = fixed_epoch_steps(TOKENS, b, SEQ)
-            lr = core.sqrt_scaled_lr(BASE[opt], BASE_BATCH, b)
-            wr = core.linear_epoch_warmup_ratio(1 / 40, BASE_BATCH, b)
+            r = recipe(opt, b, base_batch=BASE_BATCH)
             t0 = time.perf_counter()
             out = train_once(cfg, optimizer=opt, batch=b, seq=SEQ,
-                             steps=steps, lr=lr, warmup_ratio=wr)
+                             steps=steps, lr=r["lr"],
+                             warmup_ratio=r["warmup_ratio"])
             us = (time.perf_counter() - t0) / steps * 1e6
             results[(opt, b)] = out
             rows.append(csv_row(

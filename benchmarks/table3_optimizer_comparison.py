@@ -9,7 +9,8 @@ from __future__ import annotations
 import time
 from typing import List
 
-from benchmarks.common import bert_nano, csv_row, fixed_epoch_steps, train_once
+from benchmarks.common import bert_nano, csv_row, fixed_epoch_steps
+from benchmarks.protocol import train_once
 
 SEQ = 32
 BATCH = 48

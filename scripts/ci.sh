@@ -50,6 +50,16 @@ fi
 # continuous-batching serving smoke: tiny workload, must stream and drain
 python examples/serve_continuous.py --requests 4 --slots 2 --arrival-rate 50
 
+# convergence gate: the fast-tier batch-scaling study (LAMB / LANS / tuned
+# AdamW through the fused sharded stack + the two-stage re-warm-up run)
+# regression-gated against scripts/baselines/convergence_baseline.json —
+# steps-to-target, target-reached flags, final losses, claim booleans.
+# Skipped under CI_FAST (several CPU-minutes of training): the dedicated
+# `convergence` workflow job runs exactly this gate.
+if [[ -z "${CI_FAST:-}" ]]; then
+  python scripts/convergence_gate.py
+fi
+
 # telemetry gate: 20-step tiny-BERT fit with the event log AND async
 # double-buffered checkpointing on, RUN_REPORT compared against the
 # committed baseline (schema + presence, not timing) plus an overlap check

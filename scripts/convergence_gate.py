@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""CI convergence gate: the fast-tier batch-scaling study vs its baseline.
+
+    PYTHONPATH=src python scripts/convergence_gate.py            # gate
+    PYTHONPATH=src python scripts/convergence_gate.py --write-baseline
+    PYTHONPATH=src python scripts/convergence_gate.py --from-json BENCH.json
+
+Runs ``benchmarks/convergence_bench.py --fast`` (LAMB / LANS / tuned AdamW ×
+two global batches through the fused sharded stack, plus the two-stage
+re-warm-up run) and regression-gates a compact summary — steps-to-target,
+target-reached flags, final losses, and the claim booleans — against
+``scripts/baselines/convergence_baseline.json`` via ``RunReport.compare``.
+
+Convergence quality is thereby a gated property, not a one-off plot: an
+optimizer or schedule regression that slows the tiny study past tolerance
+(or flips a claim) fails CI.  Tolerances are loose on anything float
+(cross-platform drift); booleans and protocol constants are exact.
+``--write-baseline`` refreshes the baseline after an intentional protocol
+change; ``--from-json`` gates (or snapshots) an existing bench blob instead
+of re-running the study.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "scripts" / "baselines" / "convergence_baseline.json"
+
+# steps-to-target drifts with BLAS/jax versions (it is a loss-threshold
+# crossing) — gate the shape, not the exact step: generous relative
+# tolerances on numbers, exact equality on booleans / protocol constants.
+# ``None`` entries (target unreached) go through compare's equality branch,
+# so an unreached→reached flip fails the gate via ``target_reached``.
+TOLERANCES = {
+    "protocol.seq": 0.0,
+    "protocol.tokens": 0.0,
+    "protocol.target_loss": 0.0,
+    "protocol.precision": 0.0,
+    "protocol.mesh": 0.0,
+    "protocol.batches": 0.0,
+    "steps_to_target.lamb_b8": 0.5,
+    "steps_to_target.lans_b8": 0.5,
+    "steps_to_target.adamw_b8": 0.5,
+    "target_reached.lamb_b8": 0.0,
+    "target_reached.lamb_b64": 0.0,
+    "target_reached.lans_b8": 0.0,
+    "target_reached.lans_b64": 0.0,
+    "target_reached.adamw_b8": 0.0,
+    "target_reached.adamw_b64": 0.0,
+    "final_loss.lamb_b8": 0.2,
+    "final_loss.lamb_b64": 0.2,
+    "final_loss.lans_b8": 0.2,
+    "final_loss.lans_b64": 0.2,
+    "final_loss.adamw_b8": 0.2,
+    "final_loss.adamw_b64": 0.2,
+    "claims.lamb_scales_no_worse_than_tuned_adamw": 0.0,
+    "claims.rewarmup_stage2_improves": 0.0,
+    "two_stage.lamb": 0.0,
+    "two_stage.lans": 0.0,
+}
+
+
+def run_fast_bench(out: Path) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src") + os.pathsep + str(ROOT)
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [sys.executable, str(ROOT / "benchmarks" / "convergence_bench.py"),
+           "--fast", "--out", str(out)]
+    proc = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                          text=True, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"convergence bench failed:\n{proc.stdout[-2000:]}\n"
+            f"{proc.stderr[-2000:]}"
+        )
+    return json.loads(out.read_text())
+
+
+def summarize(report: dict) -> dict:
+    """The gated slice of a BENCH_convergence.json blob (no trajectories,
+    no wall times — only what must stay stable across machines)."""
+    s = {"protocol": {k: report["protocol"][k]
+                      for k in ("seq", "tokens", "target_loss", "precision",
+                                "mesh", "batches", "fast")},
+         "steps_to_target": {}, "target_reached": {}, "final_loss": {}}
+    for r in report["runs"]:
+        key = f"{r['optimizer']}_b{r['batch']}"
+        s["steps_to_target"][key] = r["steps_to_target"]
+        s["target_reached"][key] = r["target_reached"]
+        s["final_loss"][key] = r["train_loss"]
+    s["claims"] = {k: v["holds"] for k, v in report["claims"].items()}
+    s["two_stage"] = {opt: ts["stage2_improves"]
+                      for opt, ts in report["two_stage"].items()}
+    return s
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the committed baseline from this run")
+    ap.add_argument("--from-json", default=None, metavar="PATH",
+                    help="gate an existing bench JSON instead of re-running")
+    args = ap.parse_args()
+
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.telemetry import RunReport
+
+    if args.from_json:
+        report = json.loads(Path(args.from_json).read_text())
+    else:
+        with tempfile.TemporaryDirectory() as d:
+            report = run_fast_bench(Path(d) / "BENCH_convergence.json")
+    summary = summarize(report)
+
+    if args.write_baseline:
+        BASELINE.parent.mkdir(parents=True, exist_ok=True)
+        BASELINE.write_text(json.dumps(summary, indent=2) + "\n")
+        print(f"convergence_gate: baseline written -> {BASELINE}")
+        return 0
+
+    if not BASELINE.exists():
+        print(f"convergence_gate: no baseline at {BASELINE}; "
+              f"run with --write-baseline first", file=sys.stderr)
+        return 2
+
+    baseline = json.loads(BASELINE.read_text())
+    result = RunReport(summary).compare(baseline, TOLERANCES)
+    print(result.render())
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -136,7 +136,7 @@ class InputShape:
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
-    optimizer: str = "lamb"        # lamb | lars | nlamb | nnlamb | adam | adamw | adagrad | momentum
+    optimizer: str = "lamb"        # lamb | lans | lars | nlamb | nnlamb | adam | adamw | adagrad | momentum
     learning_rate: float = 1e-3
     total_steps: int = 100
     warmup_ratio: float = 1.0 / 320.0

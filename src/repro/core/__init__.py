@@ -1,5 +1,6 @@
 """repro.core — the paper's contribution: layerwise-adaptive large-batch optimization."""
 from repro.core.lamb import lamb
+from repro.core.lans import lans, normalize_grads, scale_by_lans
 from repro.core.lars import lars
 from repro.core.mixed_batch import Stage, bert_mixed_batch_plan, make_stage, scaled_plan
 from repro.core.nlamb import nlamb, nnlamb
@@ -34,6 +35,7 @@ __all__ = [
     "constant",
     "goyal_step_schedule",
     "lamb",
+    "lans",
     "lars",
     "layerwise_adapt",
     "layerwise_adaptation",
@@ -42,9 +44,11 @@ __all__ = [
     "make_stage",
     "nlamb",
     "nnlamb",
+    "normalize_grads",
     "phi_clip",
     "piecewise_stage_schedule",
     "polynomial_decay",
+    "scale_by_lans",
     "scaled_plan",
     "sqrt_scaled_lr",
     "summarize_trust_ratios",

@@ -1,0 +1,192 @@
+"""LANS — Accelerated Large Batch Optimization of BERT Pretraining in 54
+minutes (Zheng et al., 2020; PAPERS.md).
+
+LANS modifies LAMB in two ways:
+
+  * **block-normalized gradients**: each layer's gradient is normalized to
+    unit L2 norm *before* entering the Adam moments, so the moment
+    statistics see direction only — a large-batch variance-reduction trick;
+  * **Nesterov-style two-term update**: the step mixes the momentum
+    direction ``d = m̂/(√v̂+ε) + λx`` and the *current* normalized-gradient
+    direction ``d' = g̃/(√v̂+ε) + λx`` with weights ``β1 / (1-β1)``, and —
+    the part that makes it LANS rather than NAdam-with-trust — **each term
+    gets its own layerwise trust ratio**:
+
+        x ← x − η·[ β1·(φ(‖x‖)/‖d‖)·d + (1−β1)·(φ(‖x‖)/‖d'‖)·d' ]
+
+Composed as ``chain(scale_by_lans, scale_by_learning_rate)`` so the stage-2
+re-warm-up reset (``_reset_schedule_counts``) zeroes the schedule counter
+while the moments — held in a ``ScaleByAdamState`` with the same tree
+structure as LAMB's, so FSDP placement and checkpoint restore are
+identical — carry across stages.
+
+Layerwise semantics match ``core/strategy.py`` exactly: scan-stacked leaves
+get per-layer-slice norms via ``layer_axes``, every norm reduction runs in
+fp32, degenerate norms fall back to ratio 1 (and an all-zero gradient block
+passes through unnormalized), and ``trust_mask`` excludes norm scales and
+biases from both trust rescales (``wd_mask`` from the λx terms).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import _slice_norm, trust_ratio
+from repro.optim.base import (
+    GradientTransformation,
+    PyTree,
+    ScalarOrSchedule,
+    ScaleByAdamState,
+    chain,
+    clip_by_global_norm,
+    scale_by_learning_rate,
+)
+
+
+def _resolve_axes(layer_axes: Optional[PyTree], tree: PyTree) -> PyTree:
+    """Per-leaf stacked-axis tree with -1 meaning "unstacked" (None is a
+    pytree-empty node, so it cannot ride the tree directly)."""
+    if layer_axes is None:
+        return jax.tree.map(lambda _: -1, tree)
+    return jax.tree.map(
+        lambda a: -1 if a is None else a, layer_axes,
+        is_leaf=lambda x: x is None or isinstance(x, int),
+    )
+
+
+def normalize_grads(
+    grads: PyTree,
+    *,
+    layer_axes: Optional[PyTree] = None,
+    norm_ord: str = "l2",
+) -> PyTree:
+    """g̃ = g / ‖g‖ per layer block (per slice on scanned stacks), fp32.
+
+    An all-zero block passes through unchanged — the same degenerate-norm
+    fallback the trust ratio uses, so zero-initialized layers never divide
+    by zero.
+    """
+    la = _resolve_axes(layer_axes, grads)
+
+    def one(g, axis):
+        g32 = g.astype(jnp.float32)
+        n = _slice_norm(g32, axis, norm_ord)
+        return jnp.where(n > 0, g32 / jnp.where(n > 0, n, 1.0), g32)
+
+    return jax.tree.map(one, grads, la)
+
+
+def scale_by_lans(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    *,
+    wd_mask: Optional[PyTree] = None,
+    trust_mask: Optional[PyTree] = None,
+    layer_axes: Optional[PyTree] = None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    bias_correction: bool = True,
+    moment_dtype=None,
+    norm_ord: str = "l2",
+) -> GradientTransformation:
+    """The LANS direction: normalized-gradient Adam moments + the two-term
+    Nesterov update, each term trust-rescaled per layer.
+
+    Returns *positive* directions — chain with ``scale_by_learning_rate``
+    for the −η step.  State is a ``ScaleByAdamState`` (count, mu, nu): the
+    count drives bias correction and must NOT be reset at a stage switch
+    (the schedule counter lives in the downstream ``ScheduleState``).
+    """
+    mdt = jnp.dtype(moment_dtype) if moment_dtype is not None else jnp.float32
+
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda x: jnp.zeros_like(x, mdt), params)
+        return ScaleByAdamState(count=jnp.zeros([], jnp.int32),
+                                mu=zeros(), nu=zeros())
+
+    def update(updates, state, params=None):
+        if params is None:
+            raise ValueError("scale_by_lans requires params")
+        la = _resolve_axes(layer_axes, updates)
+        tm = trust_mask if trust_mask is not None else jax.tree.map(
+            lambda _: True, updates)
+        wm = wd_mask if wd_mask is not None else jax.tree.map(
+            lambda _: True, updates)
+
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        c1 = (1.0 - b1**t) if bias_correction else 1.0
+        c2 = (1.0 - b2**t) if bias_correction else 1.0
+
+        def one(g, x, m, v, axis, trusted, decayed):
+            g32 = g.astype(jnp.float32)
+            gn = _slice_norm(g32, axis, norm_ord)
+            g_tilde = jnp.where(gn > 0, g32 / jnp.where(gn > 0, gn, 1.0), g32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g_tilde
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g_tilde * g_tilde
+            denom = jnp.sqrt(v_new / c2) + eps
+            wd = weight_decay * x.astype(jnp.float32) if (
+                weight_decay and decayed) else 0.0
+            d_m = (m_new / c1) / denom + wd      # momentum direction
+            d_g = g_tilde / denom + wd           # current-gradient direction
+            if trusted:
+                r_m = trust_ratio(x, d_m, layer_axis=axis,
+                                  phi_bounds=phi_bounds, norm_ord=norm_ord)
+                r_g = trust_ratio(x, d_g, layer_axis=axis,
+                                  phi_bounds=phi_bounds, norm_ord=norm_ord)
+            else:
+                r_m = r_g = 1.0
+            u = b1 * r_m * d_m + (1 - b1) * r_g * d_g
+            return u, m_new.astype(mdt), v_new.astype(mdt)
+
+        out = jax.tree.map(one, updates, params, state.mu, state.nu, la, tm, wm)
+        # unzip the (u, m, v) leaf triples into three trees
+        treedef = jax.tree.structure(updates)
+        triples = jax.tree.leaves(out, is_leaf=lambda n: isinstance(n, tuple))
+        new_updates = jax.tree.unflatten(treedef, [o[0] for o in triples])
+        mu = jax.tree.unflatten(treedef, [o[1] for o in triples])
+        nu = jax.tree.unflatten(treedef, [o[2] for o in triples])
+        return new_updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def lans(
+    learning_rate: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    *,
+    wd_mask: Optional[PyTree] = None,
+    trust_mask: Optional[PyTree] = None,
+    layer_axes: Optional[PyTree] = None,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    bias_correction: bool = True,
+    grad_clip_norm: Optional[float] = None,
+    moment_dtype=None,
+    norm_ord: str = "l2",
+) -> GradientTransformation:
+    """LANS optimizer (Zheng et al. defaults match LAMB's: b1=.9 b2=.999).
+
+    Same signature family as :func:`repro.core.lamb.lamb`; the global-norm
+    gradient clip (when set) runs *before* the per-block normalization —
+    normalization then removes its magnitude effect on masked-in blocks,
+    which is exactly the point: LANS is clip-insensitive by construction.
+    """
+    transforms = []
+    if grad_clip_norm is not None:
+        transforms.append(clip_by_global_norm(grad_clip_norm))
+    transforms.append(
+        scale_by_lans(
+            b1, b2, eps, weight_decay,
+            wd_mask=wd_mask, trust_mask=trust_mask, layer_axes=layer_axes,
+            phi_bounds=phi_bounds, bias_correction=bias_correction,
+            moment_dtype=moment_dtype, norm_ord=norm_ord,
+        )
+    )
+    transforms.append(scale_by_learning_rate(learning_rate))
+    return chain(*transforms)

@@ -62,6 +62,74 @@ def lamb_update_ref(
     return out
 
 
+def lans_update_ref(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+    step: int = 1,
+    phi_bounds: Optional[Tuple[float, float]] = None,
+    layer_axis: Optional[int] = None,
+    apply_trust: bool = True,
+    return_ratio: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
+    """One LANS step on a single tensor as one fused XLA expression.
+
+    Zheng et al.'s update: the gradient is block-normalized (per layer
+    slice when ``layer_axis`` is set) *before* the Adam moments, and the
+    step mixes the momentum direction ``d = m̂/(√v̂+ε) + λx`` with the
+    current-gradient direction ``d' = g̃/(√v̂+ε) + λx``, each scaled by its
+    own trust ratio:  x' = x − η·[β1·r(d)·d + (1−β1)·r(d')·d'].
+
+    Returns (x', m', v').  Serves both as the numpy-style oracle the unit
+    tests check ``core.lans`` against and as the fused-XLA expression of
+    the same math (same contract as ``lamb_update_ref``).
+    ``return_ratio=True`` appends the momentum-term trust ratio (squeezed).
+    """
+    x32, g32 = x.astype(jnp.float32), g.astype(jnp.float32)
+    if layer_axis is None or layer_axis < 0:
+        axes = tuple(range(x.ndim))
+        keep = False
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != layer_axis)
+        keep = True
+
+    def norm(a):
+        return jnp.sqrt(jnp.sum(a * a, axis=axes, keepdims=keep))
+
+    gn = norm(g32)
+    g_t = jnp.where(gn > 0, g32 / jnp.where(gn > 0, gn, 1.0), g32)
+    m_new = b1 * m + (1 - b1) * g_t
+    v_new = b2 * v + (1 - b2) * g_t * g_t
+    t = jnp.asarray(step, jnp.float32)
+    denom = jnp.sqrt(v_new / (1.0 - b2**t)) + eps
+    wd = weight_decay * x32
+    d_m = m_new / (1.0 - b1**t) / denom + wd
+    d_g = g_t / denom + wd
+
+    w_norm = norm(x32)
+    if phi_bounds is not None:
+        w_norm = jnp.clip(w_norm, phi_bounds[0], phi_bounds[1])
+
+    def ratio(u):
+        un = norm(u)
+        return jnp.where(w_norm > 0, jnp.where(un > 0, w_norm / un, 1.0), 1.0)
+
+    r_m = ratio(d_m) if apply_trust else jnp.ones_like(w_norm)
+    r_g = ratio(d_g) if apply_trust else jnp.ones_like(w_norm)
+    x_new = x32 - lr * (b1 * r_m * d_m + (1 - b1) * r_g * d_g)
+    out = (x_new.astype(x.dtype), m_new, v_new)
+    if return_ratio:
+        out += (jnp.squeeze(r_m),)
+    return out
+
+
 def flash_attention_ref(
     q: jnp.ndarray,  # (B, H, S, D)
     k: jnp.ndarray,  # (B, H, T, D)

@@ -52,6 +52,14 @@ last *validated* checkpoint on a trip and aborts with exit code 3 after
 final checkpoint + clean ``status=preempted`` exit, resumable bit-exact
 with ``--resume``.
 
+``--optimizer`` picks the update rule: ``lamb`` (Algorithm 2, default),
+``lans`` (Zheng et al.'s 54-minute variant — block-normalized gradients
+into the Adam moments plus a Nesterov two-term update, each term
+trust-rescaled per layer; see core/lans.py), ``nlamb``/``nnlamb`` (App. D),
+``lars``, and the tuned baselines ``adam``/``adamw``/``adagrad``/
+``momentum``.  All of them run through the same accumulation / precision /
+sharding path; ``--fused-lamb`` applies to LAMB only.
+
 ``--smoke`` swaps in the reduced config of the same family (CPU-runnable);
 the full configs are exercised via the dry-run (repro.launch.dryrun).
 """

@@ -134,6 +134,13 @@ def make_optimizer(
             grad_clip_norm=tc.grad_clip_norm,
             moment_dtype=tc.moment_dtype, **common,
         )
+    if name == "lans":
+        return core.lans(
+            lr, tc.b1, tc.b2, tc.eps, tc.weight_decay,
+            bias_correction=tc.bias_correction,
+            grad_clip_norm=tc.grad_clip_norm,
+            moment_dtype=tc.moment_dtype, **common,
+        )
     if name == "nlamb":
         return core.nlamb(lr, weight_decay=tc.weight_decay,
                           grad_clip_norm=tc.grad_clip_norm, **common)

@@ -1,0 +1,165 @@
+"""Convergence-harness tier: the bench protocol on 8 virtual devices.
+
+The convergence bench's claims (steps-to-target vs global batch) are only
+meaningful if the protocol underneath them is deterministic: the synthetic
+MLM stream must be a pure function of its seed, and the logged loss
+trajectory must not depend on *how* the global batch is laid out — mesh
+shape or gradient-accumulation split.  This harness pins exactly that, as a
+subprocess (XLA_FLAGS must force the 8 virtual CPU devices before jax
+import; same pattern as tests/sharded_harness.py).
+
+    PYTHONPATH=src python tests/convergence_harness.py [scenario ...]
+
+Prints one JSON object on the last stdout line.  Scenarios:
+
+  stream          synthetic-MLM stream seed-stability: same seed → bitwise
+                  identical batches, different seed → different batches
+  seed_stability  protocol.train_once through the fused stack is bitwise
+                  reproducible under re-run, and its loss trajectory is
+                  stable (allclose) across mesh shapes (data=8 vs
+                  data=4,model=2) and accum settings (1 vs 2); a different
+                  data seed must move the trajectory
+  target          steps_to_target on a real trajectory: agrees with a
+                  recomputation from the logged rows, the first row's loss
+                  is its own crossing, an unreachable target is None
+  two_stage       protocol.train_stages on a mesh: both stages appear in
+                  the history with a cumulative step counter (the §4.1
+                  stage-2 re-warm-up path), finite train/eval loss
+"""
+import json
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)                       # benchmarks.*
+sys.path.insert(0, os.path.join(ROOT, "src"))  # repro.*
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks import protocol  # noqa: E402
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.core import make_stage  # noqa: E402
+from repro.launch.mesh import make_mesh_from_spec  # noqa: E402
+
+TINY = ModelConfig(
+    name="tiny-convergence", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256, tie_embeddings=True,
+)
+MESHES = ("data=8,model=1", "data=4,model=2")
+BATCH, SEQ, STEPS = 16, 32, 4
+TARGET = 5.5  # just under the ln(256) ≈ 5.55 initial MLM loss
+
+
+def _losses(run):
+    return [row["loss"] for row in run["history"]]
+
+
+def _run(mesh_spec, accum, seed=0, steps=STEPS):
+    return protocol.train_once(
+        TINY, optimizer="lamb", batch=BATCH, seq=SEQ, steps=steps,
+        lr=1e-3, warmup_ratio=0.5, seed=seed, eval_batches=2,
+        accum_steps=accum, mesh=make_mesh_from_spec(mesh_spec),
+        log_every=1, target_loss=TARGET,
+    )
+
+
+def scenario_stream():
+    it_a, _ = protocol.synthetic_stream(TINY, BATCH, SEQ, seed=0)
+    it_b, _ = protocol.synthetic_stream(TINY, BATCH, SEQ, seed=0)
+    it_c, _ = protocol.synthetic_stream(TINY, BATCH, SEQ, seed=7)
+    same, diff = True, False
+    fields = None
+    for _ in range(3):
+        a, b, c = next(it_a), next(it_b), next(it_c)
+        fields = sorted(a)
+        same &= all(np.array_equal(a[k], b[k]) for k in a)
+        diff |= any(not np.array_equal(a[k], c[k]) for k in a)
+    return {"same_seed_bitwise": bool(same),
+            "diff_seed_differs": bool(diff),
+            "fields": fields}
+
+
+def scenario_seed_stability():
+    ref = _run(MESHES[0], 1)
+    rerun = _run(MESHES[0], 1)
+    out = {
+        "rerun_bitwise": _losses(ref) == _losses(rerun),
+        "ref_losses": _losses(ref),
+        "variants": {},
+    }
+    # same global batch, different layouts: other mesh shape, accum split,
+    # and both at once — the trajectory must not move past reduction noise
+    for spec, accum in ((MESHES[1], 1), (MESHES[0], 2), (MESHES[1], 2)):
+        r = _run(spec, accum)
+        out["variants"][f"{spec}|accum{accum}"] = {
+            "loss_maxdiff": max(
+                abs(x - y) for x, y in zip(_losses(r), _losses(ref))
+            ),
+            "steps_match": ([row["step"] for row in r["history"]]
+                            == [row["step"] for row in ref["history"]]),
+        }
+    out["diff_seed_differs"] = _losses(_run(MESHES[0], 1, seed=3)) != _losses(ref)
+    return out
+
+
+def scenario_target():
+    r = _run(MESHES[0], 1, steps=5)
+    rows = [{"step": h["step"], "loss/total": h["loss"]} for h in r["history"]]
+    crossing = next(
+        (h["step"] for h in r["history"] if h["loss"] <= TARGET), None
+    )
+    return {
+        "steps_to_target": r["steps_to_target"],
+        "consistent": r["steps_to_target"] == crossing,
+        "first_row_is_own_crossing": (
+            protocol.steps_to_target(rows, r["history"][0]["loss"])
+            == r["history"][0]["step"]
+        ),
+        "unreachable_is_none": protocol.steps_to_target(rows, 0.1) is None,
+        "history_len": len(r["history"]),
+    }
+
+
+def scenario_two_stage():
+    stages = [
+        make_stage("s1", SEQ, BATCH, 3, base_lr=1e-3, base_batch=BATCH,
+                   base_warmup_ratio=1 / 3),
+        make_stage("s2", SEQ * 2, BATCH // 2, 3, base_lr=1e-3,
+                   base_batch=BATCH, base_warmup_ratio=1 / 3),
+    ]
+    r = protocol.train_stages(
+        TINY, optimizer="lamb", stages=stages,
+        mesh=make_mesh_from_spec(MESHES[0]), eval_batches=2, log_every=1,
+    )
+    return {
+        "stages_seen": sorted({row.get("stage", -1) for row in r["history"]}),
+        "stage2_rows": sum(1 for row in r["history"] if row.get("stage") == 1),
+        "total_steps": r["steps"],
+        "final_step": r["history"][-1]["step"],
+        "final_loss_finite": bool(np.isfinite(r["train_loss"])),
+        "eval_loss_finite": bool(np.isfinite(r["eval_loss"])),
+    }
+
+
+SCENARIOS = {
+    "stream": scenario_stream,
+    "seed_stability": scenario_seed_stability,
+    "target": scenario_target,
+    "two_stage": scenario_two_stage,
+}
+
+
+def main(argv):
+    names = argv or list(SCENARIOS)
+    out = {"devices": len(jax.devices())}
+    for name in names:
+        out[name] = SCENARIOS[name]()
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -11,6 +11,8 @@ Prints one JSON object on the last stdout line.  Scenarios:
 
   equiv         sharded step ≡ single-device step (unfused / fused /
                 accum2+bf16, on data=8 and data=4,model=2 meshes)
+  lans          LANS sharded ≡ single-device (fp32 and accum2+bf16): the
+                per-slice gradient-norm reductions under GSPMD
   mlm_flash     the paper path: bert-smoke MLM through flash attention,
                 fused LAMB and the fused-CE head (plus the dense-head
                 variant), sharded ≡ single-device
@@ -146,6 +148,23 @@ def scenario_equiv():
         "accum2_bf16": _equiv_entry(
             TINY,
             TrainConfig(optimizer="lamb", learning_rate=1e-3, accum_steps=2,
+                        precision="bf16"),
+        ),
+    }
+
+
+def scenario_lans():
+    """LANS (block-normalized gradient, Nesterov two-term trust-ratio update)
+    sharded ≡ single-device — plain fp32 and the accum+bf16 large-batch
+    config, on both mesh shapes.  LANS rides the unfused transform chain, so
+    this pins the per-slice gradient-norm reductions under GSPMD."""
+    return {
+        "fp32": _equiv_entry(
+            TINY, TrainConfig(optimizer="lans", learning_rate=1e-3)
+        ),
+        "accum2_bf16": _equiv_entry(
+            TINY,
+            TrainConfig(optimizer="lans", learning_rate=1e-3, accum_steps=2,
                         precision="bf16"),
         ),
     }
@@ -603,6 +622,7 @@ def scenario_guards():
 
 SCENARIOS = {
     "equiv": scenario_equiv,
+    "lans": scenario_lans,
     "mlm_flash": scenario_mlm_flash,
     "stages": scenario_stages,
     "checkpoint": scenario_checkpoint,

@@ -1,0 +1,128 @@
+"""Convergence-harness tier: the bench protocol is deterministic.
+
+The multi-device work runs in ONE subprocess (tests/convergence_harness.py,
+which forces 8 virtual CPU devices before importing jax — same pattern as
+tests/sharded_harness.py).  The module-scoped fixture runs every scenario
+once; the tests assert on slices of its JSON report, plus a few in-process
+unit checks on the pure protocol helpers that need no devices.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)  # benchmarks.* (tests run with PYTHONPATH=src)
+
+# Same global batch, different layout (mesh shape / accum split): only
+# reduction-order noise is allowed to move the logged loss trajectory.
+LOSS_TOL = 1e-2
+
+
+@pytest.fixture(scope="module")
+def report():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)  # the harness sets its own device count
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "convergence_harness.py")],
+        capture_output=True, text=True, timeout=1800, cwd=REPO, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_harness_sees_8_devices(report):
+    assert report["devices"] == 8
+
+
+@pytest.mark.slow
+def test_stream_is_pure_function_of_seed(report):
+    s = report["stream"]
+    assert s["same_seed_bitwise"], s
+    assert s["diff_seed_differs"], s
+    assert s["fields"] == ["labels", "tokens"]
+
+
+@pytest.mark.slow
+def test_trajectory_bitwise_reproducible(report):
+    assert report["seed_stability"]["rerun_bitwise"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", [
+    "data=4,model=2|accum1",   # mesh shape
+    "data=8,model=1|accum2",   # accumulation split
+    "data=4,model=2|accum2",   # both
+])
+def test_trajectory_stable_across_mesh_and_accum(report, variant):
+    """The convergence bench's steps-to-target must measure the optimizer,
+    not the batch layout: re-sharding or re-chunking the same global batch
+    may only move the logged losses by reduction noise."""
+    v = report["seed_stability"]["variants"][variant]
+    assert v["steps_match"], v
+    assert v["loss_maxdiff"] < LOSS_TOL, v
+
+
+@pytest.mark.slow
+def test_trajectory_moves_with_data_seed(report):
+    assert report["seed_stability"]["diff_seed_differs"]
+
+
+@pytest.mark.slow
+def test_steps_to_target_consistent_with_trajectory(report):
+    t = report["target"]
+    assert t["consistent"], t
+    assert t["first_row_is_own_crossing"], t
+    assert t["unreachable_is_none"], t
+    assert t["history_len"] == 5, t
+
+
+@pytest.mark.slow
+def test_two_stage_rewarmup_runs_on_mesh(report):
+    ts = report["two_stage"]
+    assert ts["stages_seen"] == [0, 1], ts
+    assert ts["stage2_rows"] == 3, ts
+    assert ts["final_step"] == ts["total_steps"] == 6, ts
+    assert ts["final_loss_finite"] and ts["eval_loss_finite"], ts
+
+
+# ---------------------------------------------------------------------------
+# in-process checks on the pure protocol helpers (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_steps_to_target_first_crossing():
+    from benchmarks import protocol
+
+    hist = [{"step": 1, "loss/total": 5.0}, {"step": 2, "loss/total": 4.0},
+            {"step": 3, "loss/total": 4.2}]
+    assert protocol.steps_to_target(hist, 4.5) == 2   # first crossing wins
+    assert protocol.steps_to_target(hist, 5.0) == 1   # ≤ is inclusive
+    assert protocol.steps_to_target(hist, 3.0) is None
+    assert protocol.steps_to_target([], 1.0) is None
+
+
+def test_recipe_sqrt_and_warmup_scaling():
+    from benchmarks import protocol
+
+    base = protocol.recipe("lamb", 8, base_batch=8, base_warmup_ratio=1 / 320)
+    big = protocol.recipe("lamb", 512, base_batch=8, base_warmup_ratio=1 / 320)
+    assert math.isclose(base["lr"], protocol.UNTUNED_BASE_LR["lamb"])
+    assert math.isclose(big["lr"], base["lr"] * 8.0)       # sqrt(64×)
+    assert math.isclose(base["warmup_ratio"], 1 / 320)
+    assert math.isclose(big["warmup_ratio"], 64 / 320)     # linear-epoch
+    capped = protocol.recipe("lamb", 512, base_batch=8, base_warmup_ratio=1 / 40)
+    assert capped["warmup_ratio"] == 1.0                   # clips at 1
+
+
+def test_make_train_config_gates_fused_lamb():
+    from benchmarks import protocol
+
+    assert protocol.make_train_config("lamb", 1e-3).use_fused_lamb
+    assert not protocol.make_train_config("lans", 1e-3).use_fused_lamb
+    assert not protocol.make_train_config("adamw", 1e-3).use_fused_lamb
+    assert not protocol.make_train_config("lamb", 1e-3, fused=False).use_fused_lamb

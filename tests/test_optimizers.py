@@ -89,6 +89,174 @@ def test_trust_mask_excludes_leaves(rng):
     )
 
 
+# ---------------------------------------------------------------------------
+# LANS (Zheng et al., the 54-minute paper): block-normalized gradients into
+# the Adam moments + the Nesterov two-term update, each term trust-rescaled
+# ---------------------------------------------------------------------------
+
+def _lans_numpy_oracle(x, g, m, v, *, lr, b1=0.9, b2=0.999, eps=1e-6,
+                       wd=0.01, step=1):
+    """Pure-numpy LANS step on one tensor (float64 arithmetic)."""
+    x, g, m, v = (np.asarray(a, np.float64) for a in (x, g, m, v))
+    gn = np.linalg.norm(g)
+    g_t = g / gn if gn > 0 else g
+    m_new = b1 * m + (1 - b1) * g_t
+    v_new = b2 * v + (1 - b2) * g_t * g_t
+    denom = np.sqrt(v_new / (1 - b2**step)) + eps
+    d_m = m_new / (1 - b1**step) / denom + wd * x
+    d_g = g_t / denom + wd * x
+
+    def ratio(u):
+        un, xn = np.linalg.norm(u), np.linalg.norm(x)
+        return xn / un if (xn > 0 and un > 0) else 1.0
+
+    x_new = x - lr * (b1 * ratio(d_m) * d_m + (1 - b1) * ratio(d_g) * d_g)
+    return x_new, m_new, v_new
+
+
+def test_lans_matches_numpy_oracle(rng):
+    """core.lans step-equivalence vs the float64 numpy oracle, multi-step
+    (moments accumulate, bias correction advances)."""
+    x = rng.standard_normal((16, 8)).astype(np.float32)
+    params = {"w": jnp.asarray(x)}
+    opt = core.lans(0.01, weight_decay=0.01)
+    state = opt.init(params)
+    m = np.zeros_like(x, np.float64)
+    v = np.zeros_like(x, np.float64)
+    for step in range(1, 5):
+        g = rng.standard_normal((16, 8)).astype(np.float32)
+        u, state = opt.update({"w": jnp.asarray(g)}, state, params)
+        params = optim.apply_updates(params, u)
+        x, m, v = _lans_numpy_oracle(x, g, m, v, lr=0.01, step=step)
+        np.testing.assert_allclose(
+            np.asarray(params["w"]), x, rtol=1e-4, atol=1e-6
+        )
+
+
+def test_lans_matches_fused_xla_reference(rng):
+    """Unfused transform chain ≡ the single fused-XLA expression
+    (kernels.ref.lans_update_ref), jitted, over several steps."""
+    from repro.kernels.ref import lans_update_ref
+
+    x = jnp.asarray(rng.standard_normal((8, 12)), jnp.float32)
+    params = {"w": x}
+    opt = core.lans(0.02, weight_decay=0.01)
+    state = opt.init(params)
+    fused = jax.jit(
+        lambda x, g, m, v, step: lans_update_ref(
+            x, g, m, v, lr=0.02, weight_decay=0.01, step=step
+        )
+    )
+    m, v = jnp.zeros_like(x), jnp.zeros_like(x)
+    for step in range(1, 4):
+        g = jnp.asarray(rng.standard_normal((8, 12)), jnp.float32)
+        u, state = opt.update({"w": g}, state, params)
+        params = optim.apply_updates(params, u)
+        x, m, v = fused(x, g, m, v, step)
+        np.testing.assert_allclose(
+            np.asarray(params["w"]), np.asarray(x), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_lans_gradient_scale_fully_invariant(rng):
+    """Stronger than LAMB: the block normalization makes EVERY step exactly
+    invariant to g → c·g (c > 0), even with accumulated moments — the
+    property that lets LANS drop gradient-clipping sensitivity."""
+    params = _tree(rng)
+    opt = core.lans(0.01, weight_decay=0.005)
+    s1, s2 = opt.init(params), opt.init(params)
+    p1 = p2 = params
+    for t in range(3):
+        g = _tree(np.random.default_rng(t))
+        g_scaled = jax.tree.map(lambda x: 37.5 * x, g)
+        u1, s1 = opt.update(g, s1, p1)
+        p1 = optim.apply_updates(p1, u1)
+        u2, s2 = opt.update(g_scaled, s2, p2)
+        p2 = optim.apply_updates(p2, u2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_lans_scan_aware_slicing_equals_unstacked(rng):
+    """Stacked (L, ...) leaf + layer_axes == L separate per-layer leaves:
+    both the gradient normalization and the two trust ratios must be
+    computed per layer slice."""
+    L = 3
+    stacked = {"w": jnp.asarray(rng.standard_normal((L, 8, 4)), jnp.float32)}
+    g_stacked = {"w": jnp.asarray(rng.standard_normal((L, 8, 4)), jnp.float32)}
+    opt_s = core.lans(0.01, weight_decay=0.01, layer_axes={"w": 0})
+    u_s, _ = opt_s.update(g_stacked, opt_s.init(stacked), stacked)
+
+    per_layer = {f"w{i}": stacked["w"][i] for i in range(L)}
+    g_per = {f"w{i}": g_stacked["w"][i] for i in range(L)}
+    opt_u = core.lans(0.01, weight_decay=0.01)
+    u_u, _ = opt_u.update(g_per, opt_u.init(per_layer), per_layer)
+
+    for i in range(L):
+        np.testing.assert_allclose(
+            np.asarray(u_s["w"][i]), np.asarray(u_u[f"w{i}"]),
+            rtol=1e-5, atol=1e-7,
+        )
+
+
+def test_lans_trust_mask_excludes_leaves(rng):
+    """Masked-out leaves skip both trust rescales but keep the normalized
+    two-term direction (the LAMB exclusion convention)."""
+    params = _tree(rng)
+    g = _tree(rng)
+    opt = core.lans(0.01, weight_decay=0.0,
+                    trust_mask={"w": True, "b": False})
+    u, _ = opt.update(g, opt.init(params), params)
+    ref = core.lans(0.01, weight_decay=0.0)
+    u_ref, _ = ref.update(g, ref.init(params), params)
+    # trusted leaf identical to the all-trusted run; masked leaf differs
+    np.testing.assert_allclose(np.asarray(u["w"]), np.asarray(u_ref["w"]))
+    assert not np.allclose(np.asarray(u["b"]), np.asarray(u_ref["b"]))
+
+
+def test_lans_normalize_grads_blockwise(rng):
+    """core.normalize_grads: unit norm per leaf (per slice when stacked);
+    zero blocks pass through."""
+    g = {
+        "w": jnp.asarray(rng.standard_normal((3, 4, 5)), jnp.float32),
+        "z": jnp.zeros((4,), jnp.float32),
+    }
+    out = core.normalize_grads(g, layer_axes={"w": 0, "z": None})
+    for i in range(3):
+        assert float(jnp.linalg.norm(out["w"][i])) == pytest.approx(1.0, rel=1e-5)
+    np.testing.assert_array_equal(np.asarray(out["z"]), 0.0)
+
+
+def test_lans_records_per_layer_trust_ratios(rng):
+    """A LANS train step with record_trust_ratios=True returns the
+    per-layer telemetry records pytree under metrics['telemetry/per_layer']
+    with one ratio per scanned layer slice."""
+    from repro.configs.base import TrainConfig
+    from repro.models import build_model
+    from repro.telemetry.trust import PER_LAYER_KEY
+    from repro.train.step import make_train_step
+    from tests.conftest import tiny_dense
+
+    model = build_model(tiny_dense())
+    tc = TrainConfig(optimizer="lans", learning_rate=1e-3,
+                     record_trust_ratios=True)
+    init_fn, step_fn = make_train_step(model, tc)
+    state = jax.jit(init_fn)(jax.random.key(0))
+    from repro.data import DataPipeline
+
+    batch = next(DataPipeline(tiny_dense(), 4, 16, seed=0))
+    state, metrics = jax.jit(step_fn)(state, batch)
+    assert PER_LAYER_KEY in metrics
+    rec = metrics[PER_LAYER_KEY]
+    ratios = rec["trust_ratio"]
+    # stacked attention leaves carry one ratio per layer
+    n_layers = tiny_dense().n_layers
+    stacked = jax.tree.leaves(ratios["blocks"])
+    assert any(x.shape and x.shape[0] == n_layers for x in stacked)
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(ratios))
+
+
 def test_lars_momentum_form(rng):
     """Algorithm 1: m = b1*m + (1-b1)(g + wd*x); update direction ∝ m."""
     params = {"w": jnp.ones((4, 4))}

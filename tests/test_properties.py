@@ -1,5 +1,11 @@
 """Hypothesis property-based tests on the system's invariants."""
+import os
+import sys
+
 import pytest
+
+# benchmarks.* (the bench protocol invariants below; tests run PYTHONPATH=src)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
@@ -106,6 +112,77 @@ def test_sqrt_scaling_composition(batch):
     a = core.sqrt_scaled_lr(1e-3, 512, batch)
     b = core.sqrt_scaled_lr(core.sqrt_scaled_lr(1e-3, 512, 2048), 2048, batch)
     assert abs(a - b) < 1e-12
+
+
+# -- convergence-bench protocol invariants (pure recipe / budget math) -------
+
+@hypothesis.given(
+    tokens=st.integers(1, 10**9),
+    batch=st.integers(1, 65536),
+    seq=st.sampled_from([32, 128, 512]),
+    k=st.integers(1, 64),
+)
+def test_fixed_epoch_steps_monotone_and_budget_safe(tokens, batch, seq, k):
+    """Fixed-epoch budget: steps never grow with batch, never spend more
+    than the token budget (except via the floor of 2), and are deterministic."""
+    from benchmarks.common import fixed_epoch_steps
+
+    s = fixed_epoch_steps(tokens, batch, seq)
+    assert s == fixed_epoch_steps(tokens, batch, seq)      # deterministic
+    assert s >= 2                                          # floor
+    assert fixed_epoch_steps(tokens, batch * k, seq) <= s  # monotone in batch
+    assert s == 2 or s * batch * seq <= tokens             # budget-safe
+
+
+@hypothesis.given(
+    base=st.floats(1e-5, 1.0),
+    base_batch=st.sampled_from([8, 64, 512]),
+    k=st.integers(1, 128),
+)
+def test_recipe_sqrt_lr_exact_on_squares(base, base_batch, k):
+    """recipe(): at batch = base·k², the sqrt rule gives exactly k·base_lr,
+    and LR is monotone non-decreasing in batch."""
+    from benchmarks.protocol import recipe
+
+    r = recipe("lamb", base_batch * k * k, base_batch=base_batch, base_lr=base)
+    assert abs(r["lr"] - k * base) <= 1e-9 * k * base
+    smaller = recipe("lamb", base_batch, base_batch=base_batch, base_lr=base)
+    assert r["lr"] >= smaller["lr"] - 1e-12
+
+
+@hypothesis.given(
+    ratio=st.floats(1e-4, 1.0),
+    base_batch=st.sampled_from([8, 64, 512]),
+    k=st.integers(1, 4096),
+)
+def test_linear_epoch_warmup_ratio_bounded_and_monotone(ratio, base_batch, k):
+    """Warmup fraction grows linearly with batch and saturates at 1.0 (the
+    whole run) — it must stay a valid fraction at any scale."""
+    r1 = core.linear_epoch_warmup_ratio(ratio, base_batch, base_batch)
+    rk = core.linear_epoch_warmup_ratio(ratio, base_batch, base_batch * k)
+    assert 0.0 < r1 <= 1.0 and 0.0 < rk <= 1.0
+    assert rk >= r1 - 1e-12                     # monotone in batch
+    if ratio * (base_batch * k) / base_batch >= 1.0:
+        assert rk == 1.0                        # saturation is exact
+
+
+@hypothesis.given(
+    steps=st.integers(2, 400),
+    warmup_frac=st.floats(0.01, 0.99),
+    base=st.floats(1e-5, 1.0),
+)
+def test_warmup_poly_schedule_peaks_at_warmup_end(steps, warmup_frac, base):
+    """The §4.1 shape the two-stage re-warm-up relies on: ramp up to the peak
+    LR at ``warmup`` (monotone), then decay monotonically toward zero."""
+    warmup = max(int(steps * warmup_frac), 1)
+    hypothesis.assume(warmup < steps)
+    s = core.warmup_poly_decay(base, steps, warmup)
+    vals = np.asarray(jax.vmap(s)(jnp.arange(0, steps + 1)))
+    peak = vals[warmup]
+    assert abs(peak - base) <= 1e-6 * base      # peak is the base LR
+    assert np.all(np.diff(vals[: warmup + 1]) >= -1e-9)   # ramp up
+    assert np.all(np.diff(vals[warmup:]) <= 1e-9)         # decay down
+    assert vals[-1] <= base * 1e-6 + 1e-9                 # ends ~0
 
 
 @hypothesis.given(

@@ -48,6 +48,17 @@ def test_sharded_step_matches_single_device(report, variant, mesh):
     assert entry["loss_diff"] < LOSS_TOL, entry
 
 
+@pytest.mark.parametrize("variant", ["fp32", "accum2_bf16"])
+@pytest.mark.parametrize("mesh", ["data=8,model=1", "data=4,model=2"])
+def test_lans_sharded_matches_single_device(report, variant, mesh):
+    """LANS normalizes each gradient block by its norm BEFORE the moments, so
+    a per-slice reduction that silently went device-local under GSPMD would
+    skew every step; sharded must stay allclose to single-device."""
+    entry = report["lans"][variant][mesh]
+    assert entry["param_maxdiff"] < PARAM_TOL, entry
+    assert entry["loss_diff"] < LOSS_TOL, entry
+
+
 @pytest.mark.parametrize("head", ["fused_ce", "dense_head"])
 @pytest.mark.parametrize("mesh", ["data=8,model=1", "data=4,model=2"])
 def test_mlm_flash_fused_sharded_matches(report, head, mesh):
