@@ -37,12 +37,14 @@ SUITES = [
     ("table3", "benchmarks.table3_optimizer_comparison", "Table 3 tuned baselines"),
     ("convergence", "benchmarks.convergence_bench",
      "steps-to-target vs global batch (fused stack, LAMB/LANS/tuned AdamW)"),
+    ("serve", "benchmarks.serve_bench",
+     "serving reliability: 2x-overload shedding + deterministic faults"),
 ]
 
 # convergence stays in FAST via its own --fast tier (suites whose run()
 # takes a ``fast`` kwarg get it forwarded below)
 FAST = {"table4", "roofline", "opt_step", "attention", "train_step", "sharding",
-        "scaling", "convergence"}
+        "scaling", "convergence", "serve"}
 
 
 def main() -> None:

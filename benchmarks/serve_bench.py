@@ -1,6 +1,25 @@
-"""Static vs continuous batching under staggered arrivals.
+"""Static vs continuous batching under staggered arrivals — plus the
+serving reliability scenarios (overload shedding, fault injection).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--requests 12 --slots 4]
+    PYTHONPATH=src python benchmarks/serve_bench.py --scenarios [--fast]
+
+``--scenarios`` runs the reliability suite (also ``benchmarks.run`` key
+``serve``) and writes a provenance-stamped ``BENCH_serve.json``:
+
+* **capacity** — closed-batch run with no overload: the goodput and
+  per-request service-time reference everything else is judged against;
+* **overload** — a Poisson arrival stream at 2× the measured capacity
+  rate against a bounded queue + per-request deadlines: admission control
+  must shed explicitly (never queue silently), keep admitted-request p99
+  within the structural SLO bound (deadline + 3× the capacity run's worst
+  service time — machine-relative, so the claim travels), and hold
+  goodput ≥ 80% of the capacity run;
+* **faults** — deterministic injector scenario (sampling NaN → retry,
+  slot corruption → quarantine + retry, persistent NaN → retry budget
+  exhausted → FAILED, decode stall → degraded mode): every submitted
+  request must end in exactly one terminal state, and a replay after
+  ``injector.reset()`` must reproduce the terminal-state counts exactly.
 
 Two servers over the same smoke model and the same Poisson-arrival workload
 (mixed prompt lengths and generation budgets):
@@ -21,8 +40,10 @@ engines on a shared same-length request set (see the determinism caveat in
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -34,11 +55,17 @@ from repro.serve import (
     Engine,
     FCFSScheduler,
     Request,
+    RequestStatus,
+    ServeFaultInjector,
+    ServeFaultSpec,
     ServeRequest,
     assign_arrivals,
     poisson_arrivals,
     serving_stats,
 )
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_JSON = ROOT / "BENCH_serve.json"
 
 
 def make_workload(n: int, seed: int, prompt_lens=(8, 12, 16),
@@ -135,6 +162,190 @@ def check_equivalence(model, params, *, n: int = 6, prompt_len: int = 12,
     )
 
 
+# ---------------------------------------------------------------------------
+# reliability scenarios: capacity baseline, 2x overload, fault injection
+# ---------------------------------------------------------------------------
+
+def _scenario_workload(n: int, seed: int) -> List[ServeRequest]:
+    """Greedy (temperature-0) mixed workload with explicit rids, so every
+    replay is token- and fault-deterministic."""
+    reqs = make_workload(n, seed)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def _status_counts(reqs: List[ServeRequest]) -> Dict[str, int]:
+    return {
+        s.value: sum(1 for r in reqs if r.status is s)
+        for s in (RequestStatus.COMPLETED, RequestStatus.SHED,
+                  RequestStatus.TIMED_OUT, RequestStatus.FAILED)
+    }
+
+
+def run_scenarios(fast: bool = False, *, seed: int = 0,
+                  out: pathlib.Path = OUT_JSON) -> Dict:
+    """The reliability suite behind ``--scenarios`` / the ``serve`` bench
+    key.  Returns the report dict written to ``BENCH_serve.json``."""
+    try:
+        from benchmarks.common import provenance_header
+    except ModuleNotFoundError:  # run as a script
+        import sys
+
+        sys.path.insert(0, str(ROOT))
+        from benchmarks.common import provenance_header
+
+    # under 2x overload the backlog at the end of arrivals is ~n/2 - slots
+    # requests: n must clear 2 * (max_queue + slots) by a margin or the
+    # overload phase ends before the queue bound ever binds
+    n = 24 if fast else 48
+    slots = 4
+    max_len = 64
+    cfg = smoke_config("smollm-360m")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+
+    # one engine for every phase: slot churn never recompiles, so reusing
+    # it keeps the suite's wall time at one jit warmup.  Phases swap the
+    # scheduler and reliability knobs; generate() drains the pool between.
+    eng = ContinuousEngine(model, params, n_slots=slots, max_len=max_len,
+                           seed=seed)
+    warm_lens = sorted({len(r.prompt) for r in _scenario_workload(n, seed)})
+    eng.generate([ServeRequest(np.zeros(s, np.int32), max_new_tokens=2)
+                  for s in warm_lens])
+
+    # --- phase 1: capacity (closed batch, nothing sheds) -----------------
+    cap_reqs = _scenario_workload(n, seed)
+    eng.scheduler = FCFSScheduler()
+    eng.generate(cap_reqs)
+    cap = serving_stats(cap_reqs)
+    assert cap["completed"] == n, "capacity run must complete everything"
+    # worst per-request service time (admission -> finish) while saturated:
+    # the machine-relative unit the overload SLO bound is built from
+    service_max_s = max(r.finish_s - r.admitted_s for r in cap_reqs)
+    cap_req_rate = cap["completed"] / cap["wall_s"]
+
+    # --- phase 2: 2x sustained overload + admission control --------------
+    # bounds are multiples of the measured service time, so the scenario is
+    # machine-relative: arrivals outpace service 2:1 whatever the hardware,
+    # the queue must overflow, and shedding must engage — silently queueing
+    # everything would blow the deadline sweep instead
+    deadline_s = 2.0 * service_max_s
+    slo_bound_s = deadline_s + 3.0 * service_max_s
+    over_reqs = _scenario_workload(n, seed)
+    assign_arrivals(
+        over_reqs, poisson_arrivals(n, 2.0 * cap_req_rate, seed=seed))
+    for r in over_reqs:
+        r.deadline_s = deadline_s
+    eng.scheduler = FCFSScheduler(max_queue=slots)
+    eng.generate(over_reqs)
+    over = serving_stats(over_reqs)
+    admitted = [r for r in over_reqs if r.status is RequestStatus.COMPLETED]
+    over_p99 = (float(np.percentile([r.latency_s for r in admitted], 99))
+                if admitted else float("inf"))
+    goodput_ratio = over.get("tokens_per_s", 0.0) / cap["tokens_per_s"]
+    # the suite's own workload: sheds are expected, silent queueing is not
+    terminal_ok_over = sum(_status_counts(over_reqs).values()) == n
+
+    # --- phase 3: deterministic fault injection + replay -----------------
+    specs = [
+        ServeFaultSpec("sample_nan", at=1),                  # retry succeeds
+        ServeFaultSpec("slot_corrupt", at=2),                # quarantine+retry
+        ServeFaultSpec("sample_nan", at=3, once=False),      # budget exhausts
+        ServeFaultSpec("decode_stall", at=5, stall_s=0.08),  # watchdog trips
+    ]
+    injector = ServeFaultInjector(specs)
+    eng.scheduler = FCFSScheduler()
+    eng.faults = injector
+    eng.stall_slo_s = 0.04
+    counts_by_run = []
+    for _ in range(2):  # second run replays the identical fault sequence
+        injector.reset()
+        fault_reqs = _scenario_workload(n, seed)
+        eng.generate(fault_reqs)
+        counts_by_run.append(_status_counts(fault_reqs))
+    eng.faults = None
+    eng.stall_slo_s = None
+    fault_counts = counts_by_run[0]
+    fires = injector.fire_counts()
+
+    claims = {
+        "overload_p99_within_slo": {
+            "p99_s": over_p99, "slo_bound_s": slo_bound_s,
+            "holds": over_p99 <= slo_bound_s,
+        },
+        "overload_goodput_ge_80pct_capacity": {
+            "goodput_ratio": goodput_ratio,
+            "holds": goodput_ratio >= 0.8,
+        },
+        "overload_sheds_explicitly": {
+            "shed": over["shed"] + over["timed_out"],
+            "holds": over["shed"] + over["timed_out"] > 0,
+        },
+        "every_request_terminal": {
+            "holds": (terminal_ok_over
+                      and sum(fault_counts.values()) == n
+                      and sum(_status_counts(cap_reqs).values()) == n),
+        },
+        "fault_counts_replay_deterministic": {
+            "counts": fault_counts,
+            "holds": (counts_by_run[0] == counts_by_run[1]
+                      and fault_counts["failed"] == 1
+                      and fault_counts["completed"] == n - 1),
+        },
+    }
+    report = {
+        "provenance": provenance_header(time.time()),
+        "protocol": {
+            "requests": n, "slots": slots, "seed": seed, "fast": fast,
+            "deadline_s": deadline_s, "service_max_s": service_max_s,
+            "overload_rate": 2.0 * cap_req_rate,
+            "fault_specs": [f"{s.kind}@{s.at}" + ("" if s.once else ":persist")
+                            for s in specs],
+        },
+        "capacity": cap,
+        "overload": {**over, "admitted_p99_s": over_p99,
+                     "goodput_ratio": goodput_ratio},
+        "faults": {"counts": fault_counts, "fires": fires,
+                   "replay_counts": counts_by_run[1]},
+        "claims": claims,
+    }
+    out.write_text(json.dumps(report, indent=2))
+    return report
+
+
+def run(fast: bool = False) -> List[str]:
+    """``benchmarks.run`` entry point: CSV rows + ``BENCH_serve.json``."""
+    try:
+        from benchmarks.common import csv_row
+    except ModuleNotFoundError:
+        import sys
+
+        sys.path.insert(0, str(ROOT))
+        from benchmarks.common import csv_row
+
+    rep = run_scenarios(fast=fast)
+    cap, over, claims = rep["capacity"], rep["overload"], rep["claims"]
+    rows = [
+        csv_row("serve/capacity", 0.0,
+                f"tok_per_s={cap['tokens_per_s']:.1f};"
+                f"completed={cap['completed']}"),
+        csv_row("serve/overload_2x", 0.0,
+                f"tok_per_s={over['tokens_per_s']:.1f};"
+                f"completed={over['completed']};shed={over['shed']};"
+                f"p99_s={over['admitted_p99_s']:.3f}"),
+        csv_row("serve/faults", 0.0,
+                ";".join(f"{k}={v}" for k, v in
+                         rep["faults"]["counts"].items())),
+    ]
+    for name, c in claims.items():
+        rows.append(csv_row(f"serve/claim_{name}", 0.0, f"holds={c['holds']}"))
+    if not all(c["holds"] for c in claims.values()):
+        failed = [k for k, c in claims.items() if not c["holds"]]
+        raise RuntimeError(f"serve reliability claims failed: {failed}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -142,7 +353,18 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--arrival-rate", type=float, default=25.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenarios", action="store_true",
+                    help="run the reliability suite (overload + faults) "
+                         "instead of the static-vs-continuous comparison")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller workload for the scenario suite")
     args = ap.parse_args()
+
+    if args.scenarios:
+        for row in run(fast=args.fast):
+            print(row)
+        print(f"report: {OUT_JSON}")
+        return 0
 
     cfg = smoke_config(args.arch)
     model = build_model(cfg)

@@ -32,6 +32,11 @@ python -m pytest -q tests/test_checkpoint.py
 # the full suite and test_sharded_train.py below)
 python -m pytest -q tests/test_fault_tolerance.py -k "detector or injector or skip_step"
 
+# fast-fail serve fault-injection gate: the serving reliability layer's
+# deterministic scenarios — retries, quarantine, timeout-frees-slot, drain
+# under load, and the every-request-one-terminal-state invariant
+python -m pytest -q tests/test_serve_faults.py
+
 # multi-device gate: sharded train step ≡ single-device on 8 virtual CPU
 # devices (the harness subprocess sets --xla_force_host_platform_device_count
 # before jax init — the flag is dead after backend init, same constraint as
@@ -49,6 +54,16 @@ fi
 
 # continuous-batching serving smoke: tiny workload, must stream and drain
 python examples/serve_continuous.py --requests 4 --slots 2 --arrival-rate 50
+
+# serving reliability scenarios: capacity vs 2x-overload (admission control
+# must shed explicitly, hold admitted-request p99 within the structural SLO
+# bound and keep goodput >= 80% of capacity) plus the deterministic fault
+# replay — the run() claims raise on any violation.  Skipped under CI_FAST
+# (one jit warmup + three serving phases): the benchmarks workflow and the
+# full local gate run it.
+if [[ -z "${CI_FAST:-}" ]]; then
+  python benchmarks/serve_bench.py --scenarios --fast
+fi
 
 # convergence gate: the fast-tier batch-scaling study (LAMB / LANS / tuned
 # AdamW through the fused sharded stack + the two-stage re-warm-up run)

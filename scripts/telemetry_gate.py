@@ -23,6 +23,15 @@ actually *overlapped* compute: background writes report nonzero wall time,
 the loop-visible blocked time stays within a generous multiple of the
 steady per-step time, and logged step times during in-flight saves stay
 within tolerance of steady state.
+
+The gate also runs a **serve** smoke: ``repro.launch.serve --continuous``
+with the deterministic fault injector on (one transient NaN that retries to
+success, one persistent slot corruption that exhausts its retry budget), and
+compares its report against ``scripts/baselines/serve_report_baseline.json``
+— terminal-state counts, retry/quarantine lifecycle counters and event
+counts are exact (the injector is ordinal-keyed and the workload greedy, so
+every replay must reproduce them bit-for-bit); latency/throughput keys are
+presence-only.
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 BASELINE = ROOT / "scripts" / "baselines" / "run_report_baseline.json"
+SERVE_BASELINE = ROOT / "scripts" / "baselines" / "serve_report_baseline.json"
 
 # schema + presence, not timing: exact where the run is deterministic by
 # construction (step counts), loose on the loss, presence-only on anything
@@ -76,6 +86,37 @@ TOLERANCES = {
     "status": 0.0,
 }
 
+# serve smoke: the fault injector is ordinal-keyed and the workload greedy,
+# so terminal-state counts and lifecycle counters are exact on every replay;
+# latencies/throughput are machine speed and stay presence-only
+SERVE_TOLERANCES = {
+    "schema_version": 0.0,
+    "serve.requests": 0.0,
+    "serve.dropped": 0.0,
+    "serve.by_status.completed": 0.0,
+    "serve.by_status.shed": 0.0,
+    "serve.by_status.timed_out": 0.0,
+    "serve.by_status.failed": 0.0,
+    "serve.lifecycle.retries": 0.0,
+    "serve.lifecycle.quarantines": 0.0,
+    "serve.lifecycle.sheds": 0.0,
+    "serve.lifecycle.timeouts": 0.0,
+    "serve.lifecycle.drains": 0.0,
+    "serve.stats.submitted": 0.0,
+    "serve.stats.completed": 0.0,
+    "serve.stats.failed": 0.0,
+    "serve.stats.tokens_per_s": None,
+    "serve.stats.latency_p99_s": None,
+    "serve.stats.ttft_p50_s": None,
+    "events.types.serve_request": 0.0,
+    "events.types.serve_retry": 0.0,
+    "events.types.serve_quarantine": 0.0,
+    "events.types.serve_stats": 0.0,
+    "provenance.git_sha": None,
+    "provenance.jax_version": None,
+    "status": 0.0,
+}
+
 
 def run_tiny_fit(telemetry_dir: Path, checkpoint_dir: Path) -> None:
     env = dict(os.environ)
@@ -100,6 +141,31 @@ def run_tiny_fit(telemetry_dir: Path, checkpoint_dir: Path) -> None:
     if proc.returncode != 0:
         raise RuntimeError(
             f"telemetry run failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+        )
+
+
+def run_serve_smoke(telemetry_dir: Path) -> None:
+    """Continuous-batching serve smoke with deterministic faults: rid 1
+    hits one transient NaN (retry succeeds), rid 2 hits persistent slot
+    corruption (the --retries 1 budget exhausts -> FAILED).  Closed greedy
+    workload, so the terminal counts replay exactly."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "smollm-360m", "--smoke", "--continuous",
+        "--requests", "6", "--slots", "4",
+        "--prompt-len", "8", "--max-new", "8",
+        "--arrival-rate", "0", "--retries", "1",
+        "--inject-faults", "sample_nan@1,slot_corrupt@2:persist",
+        "--telemetry-dir", str(telemetry_dir),
+    ]
+    proc = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                          text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"serve smoke failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
         )
 
 
@@ -155,6 +221,9 @@ def main() -> int:
         run_tiny_fit(Path(d) / "telemetry", Path(d) / "ckpt")
         report = RunReport.load(Path(d) / "telemetry" / "RUN_REPORT.json")
         events_text = (Path(d) / "telemetry" / "events.jsonl").read_text()
+        run_serve_smoke(Path(d) / "serve_telemetry")
+        serve_report = RunReport.load(
+            Path(d) / "serve_telemetry" / "RUN_REPORT.json")
 
     # the JSONL really is one valid event per line
     from repro.telemetry import validate_event
@@ -175,18 +244,25 @@ def main() -> int:
     if args.write_baseline:
         BASELINE.parent.mkdir(parents=True, exist_ok=True)
         BASELINE.write_text(json.dumps(report.report, indent=2) + "\n")
-        print(f"telemetry_gate: baseline written -> {BASELINE}")
+        SERVE_BASELINE.write_text(
+            json.dumps(serve_report.report, indent=2) + "\n")
+        print(f"telemetry_gate: baselines written -> {BASELINE}, "
+              f"{SERVE_BASELINE}")
         return 0
 
-    if not BASELINE.exists():
-        print(f"telemetry_gate: no baseline at {BASELINE}; "
-              f"run with --write-baseline first", file=sys.stderr)
-        return 2
+    for p in (BASELINE, SERVE_BASELINE):
+        if not p.exists():
+            print(f"telemetry_gate: no baseline at {p}; "
+                  f"run with --write-baseline first", file=sys.stderr)
+            return 2
 
     baseline = json.loads(BASELINE.read_text())
     result = report.compare(baseline, TOLERANCES)
     print(result.render())
-    return 0 if result.ok else 1
+    serve_result = serve_report.compare(
+        json.loads(SERVE_BASELINE.read_text()), SERVE_TOLERANCES)
+    print(serve_result.render())
+    return 0 if (result.ok and serve_result.ok) else 1
 
 
 if __name__ == "__main__":

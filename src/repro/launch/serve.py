@@ -9,9 +9,19 @@
         --continuous --slots 4 --arrival-rate 8 --requests 16
 
 ``--telemetry-dir`` (continuous mode) writes a structured event log — one
-``serve_request`` event per request lifecycle (TTFT, latency, drops) plus a
-``serve_stats`` aggregate with queue-depth and slot-occupancy counters — and
-a ``RUN_REPORT.json`` rollup at exit.
+``serve_request`` event per request lifecycle (TTFT, latency, terminal
+status) plus the reliability lifecycle events (shed/timeout/retry/
+quarantine/degrade/drain) and a ``serve_stats`` aggregate — and a
+``RUN_REPORT.json`` rollup at exit.
+
+Reliability flags (continuous mode): ``--max-queue``/``--max-queue-tokens``
+bound the arrived backlog (admission control), ``--timeout`` caps each
+request's total latency, ``--stall-slo`` arms the stall watchdog,
+``--retries`` bounds transient-failure retries, ``--inject-faults`` takes a
+deterministic fault list (``kind@ordinal[:persist][:stall=S]``, see
+``serve/faults.py``), and SIGTERM/SIGINT trigger a graceful drain: no new
+admissions, in-flight work finishes within ``--drain-grace`` seconds, the
+rest is shed, and the process exits with a clean terminal-state summary.
 """
 from __future__ import annotations
 
@@ -24,13 +34,16 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.models import build_model
 from repro.telemetry import EventLog, RunReport, run_provenance
+from repro.train.preempt import PreemptionHandler
 from repro.serve import (
     ContinuousEngine,
     Engine,
     FCFSScheduler,
     Request,
+    ServeFaultInjector,
     ServeRequest,
     assign_arrivals,
+    parse_fault_specs,
     poisson_arrivals,
     serving_stats,
 )
@@ -54,6 +67,26 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None,
                     help="admission deadline in seconds (continuous mode)")
     ap.add_argument("--max-prefills-per-step", type=int, default=2)
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-request total latency budget in seconds")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the arrived backlog (requests); overload "
+                         "beyond this is shed, not queued")
+    ap.add_argument("--max-queue-tokens", type=int, default=None,
+                    help="bound the arrived backlog by estimated "
+                         "prompt+generation tokens")
+    ap.add_argument("--stall-slo", type=float, default=None,
+                    help="per-decode-step SLO in seconds; a step past it "
+                         "degrades admissions until recovery")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="transient-failure retry budget per request")
+    ap.add_argument("--inject-faults", default="",
+                    help="deterministic fault list, e.g. "
+                         "'sample_nan@1,slot_corrupt@2:persist,"
+                         "decode_stall@3:stall=0.2'")
+    ap.add_argument("--drain-grace", type=float, default=5.0,
+                    help="seconds in-flight requests get to finish after "
+                         "SIGTERM/SIGINT before being shed")
     ap.add_argument("--telemetry-dir", default="",
                     help="write events.jsonl + RUN_REPORT.json here "
                          "(continuous mode; off = null sink)")
@@ -82,28 +115,55 @@ def main() -> None:
                            n_slots=args.slots,
                            arrival_rate=args.arrival_rate,
                            provenance=run_provenance(configs=(cfg,)))
+        faults = (ServeFaultInjector(parse_fault_specs(args.inject_faults))
+                  if args.inject_faults else None)
         eng = ContinuousEngine(
             model, params, n_slots=args.slots, max_len=max_len,
             seed=args.seed,
-            scheduler=FCFSScheduler(args.max_prefills_per_step),
+            scheduler=FCFSScheduler(args.max_prefills_per_step,
+                                    max_queue=args.max_queue,
+                                    max_queue_tokens=args.max_queue_tokens),
             telemetry=telemetry,
+            faults=faults,
+            max_retries=args.retries,
+            stall_slo_s=args.stall_slo,
         )
         reqs = [
             ServeRequest(p, max_new_tokens=args.max_new,
                          temperature=args.temperature,
-                         deadline_s=args.deadline)
+                         deadline_s=args.deadline,
+                         timeout_s=args.timeout)
             for p in prompts
         ]
         assign_arrivals(
             reqs, poisson_arrivals(len(reqs), args.arrival_rate,
                                    seed=args.seed))
-        out = eng.generate(reqs)
+        # graceful drain: SIGTERM/SIGINT flips a flag the generate loop
+        # polls — admissions stop, in-flight work gets --drain-grace
+        with PreemptionHandler() as preempt:
+            out = eng.generate(
+                reqs,
+                should_drain=lambda: preempt.triggered,
+                drain_grace_s=args.drain_grace,
+            )
         for i, r in enumerate(out[:4]):
-            print(f"req[{i}] (+{r.arrival_s:.3f}s) -> "
+            print(f"req[{i}] (+{r.arrival_s:.3f}s) [{r.status.value}] -> "
                   f"{np.asarray(r.out_tokens[:16])}...")
-        print(f"stats: {serving_stats(out)}")
+        stats = serving_stats(out)
+        print(f"stats: {stats}")
+        summary = " ".join(
+            f"{k}={stats.get(k, 0)}"
+            for k in ("submitted", "completed", "shed", "timed_out", "failed"))
+        if preempt.triggered:
+            print(f"drained ({preempt.signal_name}): {summary}")
+        else:
+            print(f"done: {summary}")
+        if faults is not None:
+            print(f"faults fired: {faults.fire_counts()}")
         if telemetry.enabled:
-            telemetry.emit("run_end", status="ok")
+            telemetry.emit(
+                "run_end",
+                status="drained" if preempt.triggered else "ok")
             report_path = Path(args.telemetry_dir) / "RUN_REPORT.json"
             RunReport.from_events(telemetry.path).write(report_path)
             print(f"telemetry: {telemetry.path} report: {report_path}")

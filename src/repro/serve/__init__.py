@@ -5,13 +5,22 @@ from repro.serve.continuous import (
     serving_stats,
 )
 from repro.serve.engine import Engine, Request, make_decode_step, make_prefill_step
+from repro.serve.faults import (
+    SERVE_FAULT_KINDS,
+    ServeFaultInjector,
+    ServeFaultSpec,
+    parse_fault_specs,
+)
 from repro.serve.kv_pool import KVPool
 from repro.serve.sampling import sample_tokens, top_k_mask
 from repro.serve.scheduler import (
+    TERMINAL_STATUSES,
     FCFSScheduler,
+    RequestStatus,
     ServeRequest,
     assign_arrivals,
     poisson_arrivals,
+    request_tokens,
     trace_arrivals,
 )
 
@@ -21,13 +30,20 @@ __all__ = [
     "FCFSScheduler",
     "KVPool",
     "Request",
+    "RequestStatus",
+    "SERVE_FAULT_KINDS",
+    "ServeFaultInjector",
+    "ServeFaultSpec",
     "ServeRequest",
+    "TERMINAL_STATUSES",
     "assign_arrivals",
     "make_decode_step",
     "make_pool_decode_step",
     "make_pool_prefill",
     "make_prefill_step",
+    "parse_fault_specs",
     "poisson_arrivals",
+    "request_tokens",
     "sample_tokens",
     "serving_stats",
     "top_k_mask",

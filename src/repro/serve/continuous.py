@@ -16,6 +16,31 @@ The engine's clock is wall time plus a fast-forward offset: when all slots
 are idle and the next arrival is in the future, the clock jumps there — so a
 simulated Poisson trace runs at full speed while latencies stay consistent.
 
+Reliability layer (the serving twin of the training fault-tolerance stack):
+
+* **admission control / load shedding** lives in the scheduler (bounded
+  queue + eager expiration sweeps); the engine turns every removal into a
+  typed terminal state and telemetry event;
+* **per-request timeouts** — a running request past its ``timeout_s``
+  latency budget is evicted at the next step boundary (the same granularity
+  training uses for preemption), freeing its slot immediately;
+* **stall watchdog** — a decode step blowing past ``stall_slo_s`` flips the
+  engine into degraded mode: new admissions get their ``max_new_tokens``
+  capped and a ``serve_degraded`` event fires; sustained healthy steps
+  recover;
+* **transient-failure retries** — a :class:`~repro.serve.faults.
+  ServeFaultInjector` (or a real detector) reports a non-finite sample or
+  corrupted slot; the slot is freed (or quarantined for a cool-down), the
+  request requeued with a bounded retry/backoff budget, and exhausted
+  budgets surface as ``FAILED`` — never a silent drop;
+* **graceful drain** — ``should_drain`` (e.g. a SIGTERM flag) stops
+  admissions, sheds the queue, lets in-flight work finish within
+  ``drain_grace_s`` and sheds the rest at expiry.
+
+Every submitted request ends in exactly one terminal
+:class:`~repro.serve.scheduler.RequestStatus`; ``generate`` asserts the
+four terminal counts are disjoint and sum to the submitted total.
+
 Determinism caveat: greedy outputs match the static ``Engine`` token-for-token
 on every row-independent family (dense/GQA/SWA, MLA, mamba/hybrid, xLSTM).
 Capacity-factor MoE couples rows — per-expert capacity and drop order depend
@@ -33,9 +58,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serve.faults import ServeFaultInjector
 from repro.serve.kv_pool import KVPool, reset_inactive
 from repro.serve.sampling import sample_tokens
-from repro.serve.scheduler import FCFSScheduler, ServeRequest
+from repro.serve.scheduler import (
+    TERMINAL_STATUSES,
+    FCFSScheduler,
+    RequestStatus,
+    ServeRequest,
+)
 from repro.sharding.context import ShardCtx, use_sharding
 from repro.telemetry import EventLog
 
@@ -94,10 +125,19 @@ class ContinuousEngine:
     """Slot-pool generation engine with mid-decode admission.
 
     Args: ``n_slots`` bounds the concurrent decode batch; ``max_len`` the
-    per-slot cache; ``scheduler`` defaults to FCFS.  Use ``submit`` +
-    ``generate`` (or just ``generate(requests)``).  Invariant: the decode
-    step shape is pinned to (n_slots, 1) for the engine's lifetime — slot
-    churn, admissions and finishes never trigger recompilation.
+    per-slot cache; ``scheduler`` defaults to FCFS (pass one with
+    ``max_queue``/``max_queue_tokens`` for admission control).  Reliability
+    knobs: ``faults`` (deterministic :class:`ServeFaultInjector` harness),
+    ``max_retries`` / ``retry_backoff_s`` (transient-failure budget),
+    ``quarantine_steps`` (decode steps a corrupted slot sits out),
+    ``stall_slo_s`` (per-step SLO arming the stall watchdog),
+    ``degrade_max_new_tokens`` (admission cap while degraded) and
+    ``degrade_recovery_steps`` (healthy steps before recovery).
+
+    Use ``submit`` + ``generate`` (or just ``generate(requests)``).
+    Invariant: the decode step shape is pinned to (n_slots, 1) for the
+    engine's lifetime — slot churn, admissions and finishes never trigger
+    recompilation.
     """
 
     def __init__(
@@ -111,6 +151,13 @@ class ContinuousEngine:
         seed: int = 0,
         scheduler: Optional[FCFSScheduler] = None,
         telemetry: Optional[EventLog] = None,
+        faults: Optional[ServeFaultInjector] = None,
+        max_retries: int = 2,
+        retry_backoff_s: float = 0.0,
+        quarantine_steps: int = 8,
+        stall_slo_s: Optional[float] = None,
+        degrade_max_new_tokens: int = 8,
+        degrade_recovery_steps: int = 16,
     ):
         self.model = model
         self.params = params
@@ -122,6 +169,15 @@ class ContinuousEngine:
         # telemetry: per-request lifecycle + per-generate aggregate counters
         # through the unified EventLog; null sink (no-op) by default
         self.telemetry = telemetry if telemetry is not None else EventLog()
+        self.faults = faults
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.quarantine_steps = quarantine_steps
+        self.stall_slo_s = stall_slo_s
+        self.degrade_max_new_tokens = degrade_max_new_tokens
+        self.degrade_recovery_steps = degrade_recovery_steps
         self.pool = KVPool(model, n_slots, max_len)
         self._prefill = jax.jit(make_pool_prefill(model, max_len))
         self._decode_sample = jax.jit(
@@ -138,6 +194,15 @@ class ContinuousEngine:
         self._top_k = np.zeros(n_slots, np.int32)
         self._dev: Optional[tuple] = None  # (tokens, positions, active, temps, top_k)
         self._step_no = 0
+        # reliability bookkeeping
+        self._roster: List[ServeRequest] = []   # every submission since
+        #                                         the last generate() drain
+        self._quarantined: Dict[int, int] = {}  # slot -> release step
+        self._degraded = False
+        self._healthy_steps = 0
+        self._run_steps = 0        # decode steps this generate (fault keying)
+        self._n_retries = 0
+        self._n_quarantines = 0
 
     # ---- internals -------------------------------------------------------
     def _next_key(self) -> jax.Array:
@@ -160,22 +225,105 @@ class ContinuousEngine:
             return True
         return len(req.out_tokens) >= req.max_new_tokens
 
+    def _emit_terminal(self, req: ServeRequest) -> None:
+        """One ``serve_request`` event per terminal request — the lifecycle
+        record the RunReport folds."""
+        fields = dict(
+            rid=req.rid, status=req.status.value, dropped=req.dropped,
+            prompt_len=len(req.prompt), new_tokens=len(req.out_tokens),
+            arrival_s=req.born_s, attempts=req.attempts,
+        )
+        if req.shed_reason is not None:
+            fields["reason"] = req.shed_reason
+        if req.fail_reason is not None:
+            fields["reason"] = req.fail_reason
+        if math.isfinite(req.first_token_s):
+            fields["ttft_s"] = req.ttft_s
+        if math.isfinite(req.finish_s) and req.status is RequestStatus.COMPLETED:
+            fields["latency_s"] = req.latency_s
+        self.telemetry.emit("serve_request", **fields)
+
+    def _terminal_removed(self, req: ServeRequest) -> None:
+        """Emit the typed lifecycle event for a request the scheduler swept
+        (shed or timed out in the queue) plus its terminal record."""
+        if req.status is RequestStatus.TIMED_OUT:
+            self.telemetry.emit("serve_timeout", rid=req.rid, where="queue")
+        else:
+            self.telemetry.emit("serve_shed", rid=req.rid,
+                                reason=req.shed_reason or "unknown")
+        self._emit_terminal(req)
+
     def _finish(self, slot: int, now: float) -> None:
         req = self._slot_req.pop(slot)
         req.finish_s = now
+        req.status = RequestStatus.COMPLETED
         self.pool.evict(slot)
         self._dev = None  # slot churn: device per-slot state is stale
-        self.telemetry.emit(
-            "serve_request", rid=req.rid, prompt_len=len(req.prompt),
-            new_tokens=len(req.out_tokens), arrival_s=req.arrival_s,
-            admitted_s=req.admitted_s, ttft_s=req.ttft_s,
-            latency_s=req.latency_s, dropped=False,
-        )
+        self._emit_terminal(req)
+
+    def _timeout_slot(self, slot: int, now: float) -> None:
+        """A running request blew its latency budget: free the slot now."""
+        req = self._slot_req.pop(slot)
+        req.finish_s = now
+        req.status = RequestStatus.TIMED_OUT
+        self.pool.evict(slot)
+        self._dev = None
+        self.telemetry.emit("serve_timeout", rid=req.rid, where="decode",
+                            new_tokens=len(req.out_tokens))
+        self._emit_terminal(req)
+
+    def _shed_slot(self, slot: int, now: float, reason: str) -> None:
+        req = self._slot_req.pop(slot)
+        req.finish_s = now
+        req.status = RequestStatus.SHED
+        req.shed_reason = reason
+        self.pool.evict(slot)
+        self._dev = None
+        self.telemetry.emit("serve_shed", rid=req.rid, reason=reason)
+        self._emit_terminal(req)
+
+    def _transient_failure(self, req: ServeRequest, slot: int, kind: str,
+                           now: float) -> None:
+        """A detected transient fault (non-finite sample / corrupted slot):
+        quarantine or free the slot, then retry or fail the request."""
+        self._slot_req.pop(slot, None)
+        if kind == "slot_corrupt":
+            self.pool.quarantine(slot)
+            self._quarantined[slot] = self._run_steps + self.quarantine_steps
+            self._n_quarantines += 1
+            self.telemetry.emit("serve_quarantine", slot=slot, rid=req.rid,
+                                release_step=self._quarantined[slot])
+        else:
+            self.pool.evict(slot)
+        self._dev = None
+        if req.attempts > self.max_retries:
+            req.status = RequestStatus.FAILED
+            req.fail_reason = kind
+            req.finish_s = now
+            self._emit_terminal(req)
+            return
+        self._n_retries += 1
+        backoff = self.retry_backoff_s * req.attempts
+        self.telemetry.emit("serve_retry", rid=req.rid,
+                            attempt=req.attempts, reason=kind,
+                            backoff_s=backoff)
+        req.out_tokens = []
+        req.admitted_s = math.nan
+        req.first_token_s = math.nan
+        req.status = RequestStatus.PENDING
+        req.arrival_s = now + backoff
+        self.scheduler.submit(req)
 
     def _admit_one(
         self, req: ServeRequest, clock: Callable[[], float],
         on_token: Optional[TokenCallback],
     ) -> None:
+        req.attempts += 1
+        if self._degraded:
+            # degraded mode: cap the generation budget of new admissions so
+            # a stalling backend sheds decode work before it sheds requests
+            req.max_new_tokens = max(
+                1, min(req.max_new_tokens, self.degrade_max_new_tokens))
         slot = self.pool.acquire()
         assert slot is not None, "admit() respects free-slot budget"
         prompt = np.asarray(req.prompt, np.int32)
@@ -188,6 +336,14 @@ class ContinuousEngine:
             )[0]
         )
         self.pool.insert(cache1, slot, len(prompt))
+        self._dev = None  # slot churn: device per-slot state is stale
+        # fault-injection point: the first sample of this attempt.  A real
+        # detector would check np.isnan(logits) / cache health here.
+        kind = (self.faults.fire_request(req.rid)
+                if self.faults is not None else None)
+        if kind is not None:
+            self._transient_failure(req, slot, kind, clock())
+            return
         req.out_tokens.append(tok)
         # the int() above blocked on the prefill: stamp after, not before
         req.first_token_s = clock()
@@ -201,7 +357,34 @@ class ContinuousEngine:
         self._tokens[slot] = tok
         self._temps[slot] = req.temperature
         self._top_k[slot] = req.top_k
-        self._dev = None  # slot churn: device per-slot state is stale
+
+    def _release_quarantined(self, *, force: bool = False) -> None:
+        for slot, due in list(self._quarantined.items()):
+            if force or self._run_steps >= due:
+                self.pool.release(slot)
+                del self._quarantined[slot]
+
+    def _watchdog(self, step_wall_s: float) -> None:
+        """Stall watchdog: one slow decode step degrades admissions; a
+        sustained healthy streak recovers."""
+        if self.stall_slo_s is None:
+            return
+        if step_wall_s > self.stall_slo_s:
+            self._healthy_steps = 0
+            if not self._degraded:
+                self._degraded = True
+                self.telemetry.emit(
+                    "serve_degraded", active=True, step_s=step_wall_s,
+                    slo_s=self.stall_slo_s,
+                    max_new_tokens_cap=self.degrade_max_new_tokens)
+        elif self._degraded:
+            self._healthy_steps += 1
+            if self._healthy_steps >= self.degrade_recovery_steps:
+                self._degraded = False
+                self._healthy_steps = 0
+                self.telemetry.emit("serve_degraded", active=False,
+                                    step_s=step_wall_s,
+                                    slo_s=self.stall_slo_s)
 
     def _step(
         self, clock: Callable[[], float], on_token: Optional[TokenCallback]
@@ -238,9 +421,11 @@ class ContinuousEngine:
         """Validate and enqueue a request (returns it for chaining).
 
         Invariant: admission is deferred to ``generate``'s loop — a
-        submitted request holds no slot until the scheduler admits it.
-        Raises ValueError if the prompt is empty, the prompt+budget cannot
-        fit the pool's ``max_len``, or the sampling params are malformed
+        submitted request holds no slot until the scheduler admits it, and
+        overload rejection happens at *arrival* (the scheduler's bounded-
+        queue sweep), so check ``req.status`` after ``generate``.  Raises
+        ValueError if the prompt is empty, the prompt+budget cannot fit the
+        pool's ``max_len``, or the sampling params are malformed
         (non-finite/negative temperature, negative top_k) — caught here so
         a bad request fails loudly at submit instead of poisoning the
         batched sampling arrays mid-decode.
@@ -263,6 +448,9 @@ class ContinuousEngine:
                 f"request needs {need} cache positions but pool max_len is "
                 f"{self.max_len}"
             )
+        if math.isnan(req.submitted_s):
+            req.submitted_s = req.arrival_s
+        self._roster.append(req)
         return self.scheduler.submit(req)
 
     def generate(
@@ -270,15 +458,23 @@ class ContinuousEngine:
         requests: Optional[Sequence[ServeRequest]] = None,
         *,
         on_token: Optional[TokenCallback] = None,
+        should_drain: Optional[Callable[[], bool]] = None,
+        drain_grace_s: float = 5.0,
     ) -> List[ServeRequest]:
         """Run until the queue and all slots drain.
 
         Args: ``requests`` to submit up front (may be None if ``submit`` was
-        called directly); ``on_token(req, tok)`` streams every sampled token.
-        Returns the submitted requests, completed in place (check
-        ``.dropped`` for deadline casualties).  Invariant: wall-clock
-        latencies stay consistent even when the virtual clock fast-forwards
-        across idle gaps between arrivals.
+        called directly); ``on_token(req, tok)`` streams every sampled
+        token; ``should_drain`` is polled once per loop — when it first
+        returns True the engine stops admissions, sheds the queue, and
+        gives in-flight requests ``drain_grace_s`` seconds to finish before
+        shedding them too (SIGTERM wiring lives in ``launch/serve.py``).
+        Returns the submitted requests, completed in place — check
+        ``.status`` for the terminal state (``.dropped`` still covers the
+        shed/timed-out union).  Invariants: wall-clock latencies stay
+        consistent even when the virtual clock fast-forwards across idle
+        gaps between arrivals, and every request submitted since the last
+        ``generate`` ends in exactly one terminal state (asserted).
         """
         submitted = [self.submit(r) for r in requests] if requests else []
         t0 = time.perf_counter()
@@ -287,8 +483,12 @@ class ContinuousEngine:
         # host-side counters (ints per loop iteration — no device syncs)
         queue_samples: List[int] = []
         occ_samples: List[int] = []
-        n_dropped = 0
         n_steps = 0
+        self._run_steps = 0
+        self._n_retries = 0
+        self._n_quarantines = 0
+        draining = False
+        drain_deadline = math.inf
 
         def clock() -> float:
             return time.perf_counter() - t0 + offset
@@ -296,34 +496,89 @@ class ContinuousEngine:
         with use_sharding(self.shard_ctx):
             while self.scheduler.has_pending() or self._slot_req:
                 now = clock()
-                admitted, dropped = self.scheduler.admit(now, self.pool.n_free)
-                n_dropped += len(dropped)
-                for req in dropped:
+                if (not draining and should_drain is not None
+                        and should_drain()):
+                    draining = True
+                    drain_deadline = now + max(0.0, drain_grace_s)
+                    shed = self.scheduler.drain(now)
                     self.telemetry.emit(
-                        "serve_request", rid=req.rid,
-                        prompt_len=len(req.prompt), new_tokens=0,
-                        arrival_s=req.arrival_s, dropped=True,
-                    )
+                        "serve_drain", queued=len(shed),
+                        in_flight=len(self._slot_req),
+                        grace_s=max(0.0, drain_grace_s))
+                    for req in shed:
+                        self._terminal_removed(req)
+                if draining:
+                    # retries resubmitted after the drain started are shed
+                    for req in self.scheduler.drain(now):
+                        self._terminal_removed(req)
+                    if now >= drain_deadline and self._slot_req:
+                        for slot in list(self._slot_req):
+                            self._shed_slot(slot, now, "drain")
+                    admitted = []
+                else:
+                    # running requests past their latency budget free their
+                    # slot before this round's admissions claim it
+                    for slot in list(self._slot_req):
+                        req = self._slot_req[slot]
+                        if (req.timeout_s is not None
+                                and now - req.born_s > req.timeout_s):
+                            self._timeout_slot(slot, now)
+                    self._release_quarantined()
+                    admitted, removed = self.scheduler.admit(
+                        now, self.pool.n_free)
+                    for req in removed:
+                        self._terminal_removed(req)
                 for req in admitted:
                     self._admit_one(req, clock, on_token)
                 if telem:
                     queue_samples.append(self.scheduler.queue_depth(now))
-                    occ_samples.append(self.n_slots - self.pool.n_free)
+                    occ_samples.append(
+                        self.n_slots - self.pool.n_free
+                        - len(self._quarantined))
                 if not self._slot_req:
+                    if self._quarantined and self.scheduler.has_pending():
+                        # no decode steps will run while the pool idles, so
+                        # a quarantine can never expire on its own: release
+                        # early rather than deadlock the queue
+                        self._release_quarantined(force=True)
+                        continue
                     nxt = self.scheduler.next_arrival()
                     if nxt is None:
                         break
                     offset += max(0.0, nxt - clock())
                     continue
+                t_step = time.perf_counter()
+                if self.faults is not None:
+                    stall = self.faults.stall_s(self._run_steps)
+                    if stall > 0.0:
+                        time.sleep(stall)
                 self._step(clock, on_token)
+                self._watchdog(time.perf_counter() - t_step)
+                self._run_steps += 1
                 n_steps += 1
+        self._release_quarantined(force=True)
+
+        # exact, disjoint terminal accounting over everything submitted
+        # since the last generate (direct submit() calls included)
+        roster, self._roster = self._roster, []
+        counts = {s: 0 for s in TERMINAL_STATUSES}
+        for r in roster:
+            if r.status not in counts:
+                raise RuntimeError(
+                    f"request {r.rid} left generate() non-terminal: "
+                    f"{r.status}")
+            counts[r.status] += 1
+        assert sum(counts.values()) == len(roster)
+
         if telem:
-            stats = serving_stats(submitted)
+            stats = serving_stats(roster)
             stats.update(
                 decode_steps=n_steps,
-                # serving_stats only sees requests passed to generate();
-                # n_dropped also covers requests enqueued via submit()
-                dropped=max(n_dropped, int(stats.get("dropped", 0))),
+                submitted=len(roster),
+                retries=self._n_retries,
+                quarantines=self._n_quarantines,
+                drained=draining,
+                degraded=self._degraded,
                 queue_depth_mean=float(np.mean(queue_samples)) if queue_samples else 0.0,
                 queue_depth_max=int(max(queue_samples, default=0)),
                 slot_occupancy_mean=(
@@ -339,22 +594,38 @@ class ContinuousEngine:
 def serving_stats(requests: Sequence[ServeRequest]) -> Dict[str, float]:
     """Aggregate throughput/latency over a completed request set.
 
-    Returns request/token counts, tokens/s over the busy window, and
-    p50/p99 latency + TTFT.  Invariant: dropped requests are counted but
-    excluded from every latency percentile.
+    Returns the disjoint terminal counts (``completed`` / ``shed`` /
+    ``timed_out`` / ``failed``, summing to ``submitted``), request/token
+    counts, tokens/s over the busy window, and p50/p99 latency + TTFT.
+    Invariants: only completed requests enter the latency percentiles, and
+    the legacy ``dropped`` counter equals ``shed + timed_out`` exactly.
     """
-    done = [r for r in requests if not r.dropped and r.out_tokens]
+    by_status = {s: 0 for s in TERMINAL_STATUSES}
+    for r in requests:
+        if r.status in by_status:
+            by_status[r.status] += 1
+    counts = {
+        "submitted": len(requests),
+        "completed": by_status[RequestStatus.COMPLETED],
+        "shed": by_status[RequestStatus.SHED],
+        "timed_out": by_status[RequestStatus.TIMED_OUT],
+        "failed": by_status[RequestStatus.FAILED],
+        "dropped": (by_status[RequestStatus.SHED]
+                    + by_status[RequestStatus.TIMED_OUT]),
+    }
+    done = [r for r in requests
+            if r.status is RequestStatus.COMPLETED and r.out_tokens]
     if not done:
-        return {"requests": 0, "dropped": sum(r.dropped for r in requests)}
+        return {"requests": 0, **counts}
     new_tokens = sum(len(r.out_tokens) for r in done)
-    start = min(r.arrival_s for r in done)
+    start = min(r.born_s for r in done)
     end = max(r.finish_s for r in done)
     lat = np.array([r.latency_s for r in done])
     ttft = np.array([r.ttft_s for r in done])
     wall = max(end - start, 1e-9)
     return {
         "requests": len(done),
-        "dropped": sum(r.dropped for r in requests),
+        **counts,
         "new_tokens": new_tokens,
         "wall_s": wall,
         "tokens_per_s": new_tokens / wall,

@@ -148,6 +148,19 @@ class KVPool:
         self.lengths[slot] = 0
         self._free.append(slot)
 
+    def quarantine(self, slot: int) -> None:
+        """Evict `slot` *without* returning it to the free list (suspected
+        state corruption).  The slot is unschedulable until `release`."""
+        self.evict(slot)
+        self._free.remove(slot)
+
+    def release(self, slot: int) -> None:
+        """Return a quarantined slot to the free list (its device state was
+        already zeroed by `quarantine`; the next insert overwrites it)."""
+        if slot in self._free or self.lengths[slot] > 0:
+            raise ValueError(f"slot {slot} is not quarantined")
+        self._free.append(slot)
+
     def reset(self) -> None:
         """Evict everything (used between benchmark phases)."""
         for slot in range(self.n_slots):

@@ -41,8 +41,14 @@ EVENT_TYPES = frozenset({
     "trust_ratios",   # per-layer trust-ratio/norm summaries at a logged step
     "checkpoint",     # checkpoint written (async saves add snapshot/write timings)
     "resume",         # training resumed from a persisted checkpoint
-    "serve_request",  # one request's lifecycle (incl. deadline drops)
+    "serve_request",  # one request's terminal lifecycle record
     "serve_stats",    # aggregate serving stats for one generate() run
+    "serve_shed",     # admission control rejected a request (reason says why)
+    "serve_timeout",  # request blew its latency budget (queue or decode)
+    "serve_retry",    # transient failure: request requeued for another attempt
+    "serve_quarantine",  # corrupted slot withheld from the free list
+    "serve_degraded", # stall watchdog toggled degraded admissions
+    "serve_drain",    # graceful drain started: admissions stopped
     "bench_result",   # one benchmark suite's result
     "nonfinite_step", # in-jit guard skipped step(s): non-finite loss/grads
     "rollback",       # supervisor restored an earlier checkpoint after a trip
@@ -61,6 +67,12 @@ REQUIRED_FIELDS: Dict[str, tuple] = {
     "resume": ("step", "path"),
     "serve_request": ("rid",),
     "serve_stats": (),
+    "serve_shed": ("rid", "reason"),
+    "serve_timeout": ("rid",),
+    "serve_retry": ("rid", "attempt"),
+    "serve_quarantine": ("slot", "rid"),
+    "serve_degraded": ("active",),
+    "serve_drain": ("queued", "in_flight"),
     "bench_result": ("name",),
     "nonfinite_step": ("step", "count"),
     "rollback": ("step", "from_step", "reason"),

@@ -229,6 +229,26 @@ class RunReport:
                 "requests": len(sreqs),
                 "dropped": sum(1 for ev in sreqs if ev.get("dropped")),
             }
+            # disjoint terminal-state counts (each serve_request event is
+            # one request's single terminal record, so these sum to
+            # `requests`) plus the reliability lifecycle counters the serve
+            # fault-injection gate asserts on
+            statuses = [ev.get("status") for ev in sreqs]
+            if any(s is not None for s in statuses):
+                serve["by_status"] = {
+                    s: statuses.count(s)
+                    for s in ("completed", "shed", "timed_out", "failed")
+                }
+            lifecycle = {
+                "sheds": len(by_type.get("serve_shed", [])),
+                "timeouts": len(by_type.get("serve_timeout", [])),
+                "retries": len(by_type.get("serve_retry", [])),
+                "quarantines": len(by_type.get("serve_quarantine", [])),
+                "degraded_transitions": len(by_type.get("serve_degraded", [])),
+                "drains": len(by_type.get("serve_drain", [])),
+            }
+            if any(lifecycle.values()):
+                serve["lifecycle"] = lifecycle
             if sstats:
                 serve["stats"] = {
                     k: v for k, v in sstats[-1].items()

@@ -12,9 +12,11 @@ from repro.serve import (
     FCFSScheduler,
     KVPool,
     Request,
+    RequestStatus,
     ServeRequest,
     assign_arrivals,
     poisson_arrivals,
+    request_tokens,
     sample_tokens,
 )
 from repro.serve.continuous import make_pool_decode_step, make_pool_prefill
@@ -248,6 +250,74 @@ def test_arrival_processes():
         [ServeRequest(np.zeros(2, np.int32)) for _ in range(3)],
         np.array([0.0, 0.5, 1.0]))
     assert [r.arrival_s for r in reqs] == [0.0, 0.5, 1.0]
+
+
+def test_sweep_expires_with_zero_free_slots():
+    """The lazy-deadline regression: expirations must leave the queue on
+    every admit() call even when the pool is saturated (free_slots=0), so
+    queue depth stays honest under load."""
+    sched = FCFSScheduler()
+    expired = sched.submit(
+        ServeRequest(np.zeros(4, np.int32), arrival_s=0.0, deadline_s=0.5))
+    kept = sched.submit(ServeRequest(np.zeros(4, np.int32), arrival_s=0.0))
+    admitted, removed = sched.admit(now=1.0, free_slots=0)
+    assert admitted == [] and removed == [expired]
+    assert expired.status is RequestStatus.SHED
+    assert expired.shed_reason == "deadline"
+    assert sched.queue_depth(1.0) == 1 and sched.has_pending()
+    admitted, _ = sched.admit(now=1.0, free_slots=1)
+    assert admitted == [kept]
+
+
+def test_sweep_times_out_queued_requests():
+    """A request whose total latency budget expires while still queued is
+    TIMED_OUT (not shed) — the two counters stay disjoint."""
+    sched = FCFSScheduler()
+    late = sched.submit(
+        ServeRequest(np.zeros(4, np.int32), arrival_s=0.0, timeout_s=0.4))
+    _, removed = sched.admit(now=1.0, free_slots=0)
+    assert removed == [late]
+    assert late.status is RequestStatus.TIMED_OUT and late.dropped
+
+
+def test_bounded_queue_sheds_newest_keeps_fcfs():
+    """Overload shedding evicts the *newest* arrivals beyond the bound with
+    a typed queue_full result; survivors are admitted in FCFS order."""
+    sched = FCFSScheduler(max_prefills_per_step=4, max_queue=2)
+    reqs = [sched.submit(ServeRequest(np.zeros(4, np.int32), arrival_s=t))
+            for t in (0.0, 0.1, 0.2, 0.3)]
+    admitted, removed = sched.admit(now=1.0, free_slots=0)
+    assert admitted == []
+    assert sorted(r.arrival_s for r in removed) == [0.2, 0.3]
+    assert all(r.status is RequestStatus.SHED
+               and r.shed_reason == "queue_full" for r in removed)
+    admitted, _ = sched.admit(now=1.0, free_slots=4)
+    assert [r.arrival_s for r in admitted] == [0.0, 0.1]  # FCFS preserved
+    assert all(r is reqs[i] for i, r in enumerate(admitted))
+
+
+def test_bounded_queue_token_budget():
+    """max_queue_tokens bounds the backlog by estimated prompt+generation
+    tokens, not request count."""
+    sched = FCFSScheduler(max_queue_tokens=24)
+    a = sched.submit(ServeRequest(np.zeros(8, np.int32), max_new_tokens=4))
+    b = sched.submit(ServeRequest(np.zeros(8, np.int32), max_new_tokens=4))
+    c = sched.submit(ServeRequest(np.zeros(8, np.int32), max_new_tokens=4))
+    assert request_tokens(a) == 12
+    _, removed = sched.admit(now=0.0, free_slots=0)
+    assert removed == [c]  # 12 + 12 fit, the third overflows
+    assert b.status is RequestStatus.PENDING
+
+
+def test_scheduler_drain_sheds_everything():
+    """drain() sheds arrived *and* future requests with reason drain."""
+    sched = FCFSScheduler()
+    reqs = [sched.submit(ServeRequest(np.zeros(4, np.int32), arrival_s=t))
+            for t in (0.0, 5.0)]
+    removed = sched.drain(now=1.0)
+    assert removed == reqs and not sched.has_pending()
+    assert all(r.status is RequestStatus.SHED and r.shed_reason == "drain"
+               for r in reqs)
 
 
 def test_engine_enforces_pool_capacity(served):

@@ -1,0 +1,337 @@
+"""Serving reliability layer: fault injection, retries, quarantine,
+timeouts, stall-watchdog degrade, graceful drain, terminal-state invariant.
+
+The serving twin of ``test_train_faults``: every scenario runs the real
+``ContinuousEngine`` over a tiny model with a deterministic
+``ServeFaultInjector``, then asserts on typed terminal states and the
+telemetry lifecycle events."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.models import build_model
+from repro.serve import (
+    ContinuousEngine,
+    FCFSScheduler,
+    RequestStatus,
+    ServeFaultInjector,
+    ServeFaultSpec,
+    ServeRequest,
+    parse_fault_specs,
+)
+from repro.telemetry import EventLog, RunReport
+
+
+@pytest.fixture(scope="module")
+def served():
+    model = build_model(tiny_dense())
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def _reqs(n, *, max_new=4, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [
+        ServeRequest(rng.integers(0, 256, size=8).astype(np.int32),
+                     max_new_tokens=max_new, rid=i, **kw)
+        for i in range(n)
+    ]
+
+
+def _counts(reqs):
+    return {
+        s.value: sum(1 for r in reqs if r.status is s)
+        for s in (RequestStatus.COMPLETED, RequestStatus.SHED,
+                  RequestStatus.TIMED_OUT, RequestStatus.FAILED)
+    }
+
+
+# ---------------------------------------------------------------------------
+# injector unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_injector_once_semantics_and_replay():
+    inj = ServeFaultInjector([ServeFaultSpec("sample_nan", at=3)])
+    assert inj.fire_request(2) is None
+    assert inj.fire_request(3) == "sample_nan"
+    assert inj.fire_request(3) is None          # once: the retry succeeds
+    inj.reset()
+    assert inj.fire_request(3) == "sample_nan"  # replay is identical
+
+
+def test_injector_persistent_and_priority():
+    inj = ServeFaultInjector([
+        ServeFaultSpec("sample_nan", at=1, once=False),
+        ServeFaultSpec("slot_corrupt", at=1),
+    ])
+    # the stronger failure decides the slot's fate; at most one per call
+    assert inj.fire_request(1) == "slot_corrupt"
+    assert inj.fire_request(1) == "sample_nan"  # persistent keeps firing
+    assert inj.fire_request(1) == "sample_nan"
+    assert inj.fire_counts() == {"slot_corrupt": 1, "sample_nan": 2}
+
+
+def test_injector_stall_keyed_by_step_ordinal():
+    inj = ServeFaultInjector([
+        ServeFaultSpec("decode_stall", at=2, stall_s=0.1),
+        ServeFaultSpec("decode_stall", at=-1, stall_s=0.01, once=False),
+    ])
+    assert inj.stall_s(0) == pytest.approx(0.01)
+    assert inj.stall_s(2) == pytest.approx(0.11)  # matching specs sum
+    assert inj.stall_s(2) == pytest.approx(0.01)  # once spec already fired
+
+
+def test_parse_fault_specs():
+    specs = parse_fault_specs(
+        "sample_nan@1,slot_corrupt@2:persist,decode_stall@3:stall=0.2")
+    assert [(s.kind, s.at, s.once) for s in specs] == [
+        ("sample_nan", 1, True), ("slot_corrupt", 2, False),
+        ("decode_stall", 3, True)]
+    assert specs[2].stall_s == pytest.approx(0.2)
+    with pytest.raises(ValueError, match="kind@ordinal"):
+        parse_fault_specs("sample_nan")
+    with pytest.raises(ValueError, match="unknown serve fault kind"):
+        parse_fault_specs("oom@1")
+    with pytest.raises(ValueError, match="option"):
+        parse_fault_specs("sample_nan@1:never")
+
+
+# ---------------------------------------------------------------------------
+# engine: retries, quarantine, exhaustion
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_retries_then_completes(served):
+    """A once-fault frees the slot and requeues the request; the retry
+    completes with the same tokens an unfaulted run produces."""
+    model, params = served
+    ref = ContinuousEngine(model, params, n_slots=2, max_len=32).generate(
+        _reqs(3))
+    log = EventLog.memory()
+    eng = ContinuousEngine(
+        model, params, n_slots=2, max_len=32, telemetry=log,
+        faults=ServeFaultInjector([ServeFaultSpec("sample_nan", at=1)]))
+    out = eng.generate(_reqs(3))
+    assert _counts(out) == {"completed": 3, "shed": 0, "timed_out": 0,
+                            "failed": 0}
+    assert out[1].attempts == 2
+    assert [e["rid"] for e in log.events if e["event"] == "serve_retry"] == [1]
+    for r, s in zip(out, ref):  # greedy: the retry changes nothing
+        assert r.out_tokens == s.out_tokens
+    assert eng.pool.n_free == 2
+
+
+def test_retry_budget_exhaustion_fails_not_drops(served):
+    model, params = served
+    log = EventLog.memory()
+    eng = ContinuousEngine(
+        model, params, n_slots=2, max_len=32, telemetry=log, max_retries=2,
+        faults=ServeFaultInjector(
+            [ServeFaultSpec("sample_nan", at=0, once=False)]))
+    out = eng.generate(_reqs(2))
+    assert out[0].status is RequestStatus.FAILED
+    assert out[0].fail_reason == "sample_nan"
+    assert not out[0].dropped            # failed is surfaced, not a drop
+    assert out[0].attempts == 3          # 1 try + 2 retries
+    assert out[1].status is RequestStatus.COMPLETED
+    retries = [e for e in log.events if e["event"] == "serve_retry"]
+    assert [e["attempt"] for e in retries] == [1, 2]
+    terminal = [e for e in log.events if e["event"] == "serve_request"]
+    assert sorted(e["status"] for e in terminal) == ["completed", "failed"]
+
+
+def test_slot_corruption_quarantines_and_recovers(served):
+    """slot_corrupt evicts the slot *out of* the free list for a cooldown;
+    the request retries on another slot and the pool ends whole."""
+    model, params = served
+    log = EventLog.memory()
+    eng = ContinuousEngine(
+        model, params, n_slots=2, max_len=32, telemetry=log,
+        quarantine_steps=2,
+        faults=ServeFaultInjector([ServeFaultSpec("slot_corrupt", at=0)]))
+    out = eng.generate(_reqs(3, max_new=6))
+    assert _counts(out)["completed"] == 3
+    quar = [e for e in log.events if e["event"] == "serve_quarantine"]
+    assert len(quar) == 1 and quar[0]["rid"] == 0
+    assert eng.pool.n_free == 2  # quarantine released by the end
+
+
+def test_quarantine_cannot_deadlock_single_slot(served):
+    """With every slot quarantined and work still queued, the engine must
+    force-release rather than wait for decode steps that can never run."""
+    model, params = served
+    eng = ContinuousEngine(
+        model, params, n_slots=1, max_len=32, quarantine_steps=1000,
+        faults=ServeFaultInjector([ServeFaultSpec("slot_corrupt", at=0)]))
+    out = eng.generate(_reqs(2))
+    assert _counts(out)["completed"] == 2
+    assert eng.pool.n_free == 1
+
+
+# ---------------------------------------------------------------------------
+# engine: timeouts free the slot
+# ---------------------------------------------------------------------------
+
+def test_decode_timeout_frees_slot_for_next_request(served):
+    """A running request past its latency budget is cancelled at the next
+    step boundary; its slot is reused and n_free is restored at drain."""
+    model, params = served
+    log = EventLog.memory()
+    # persistent stall makes every decode step >= 10ms, so the 30ms budget
+    # expires mid-decode long before 40 new tokens could finish
+    eng = ContinuousEngine(
+        model, params, n_slots=1, max_len=64, telemetry=log,
+        faults=ServeFaultInjector(
+            [ServeFaultSpec("decode_stall", at=-1, stall_s=0.01,
+                            once=False)]))
+    slow = ServeRequest(np.zeros(8, np.int32), max_new_tokens=40,
+                        timeout_s=0.03, rid=0)
+    quick = ServeRequest(np.zeros(8, np.int32), max_new_tokens=2, rid=1)
+    out = eng.generate([slow, quick])
+    assert out[0].status is RequestStatus.TIMED_OUT and out[0].dropped
+    assert 0 < len(out[0].out_tokens) < 40      # cancelled mid-decode
+    assert out[1].status is RequestStatus.COMPLETED  # slot was reusable
+    assert eng.pool.n_free == 1
+    t = [e for e in log.events if e["event"] == "serve_timeout"]
+    assert len(t) == 1 and t[0]["where"] == "decode"
+
+
+# ---------------------------------------------------------------------------
+# engine: stall watchdog degrades admissions
+# ---------------------------------------------------------------------------
+
+def test_stall_watchdog_degrades_new_admissions(served):
+    """A decode step past the SLO flips degraded mode: later admissions get
+    max_new_tokens capped, and the serve_degraded event fires."""
+    model, params = served
+    log = EventLog.memory()
+    eng = ContinuousEngine(
+        model, params, n_slots=1, max_len=64, telemetry=log,
+        stall_slo_s=0.05, degrade_max_new_tokens=2,
+        degrade_recovery_steps=10_000,
+        faults=ServeFaultInjector(
+            [ServeFaultSpec("decode_stall", at=0, stall_s=0.2)]))
+    out = eng.generate(_reqs(2, max_new=8))
+    degraded = [e for e in log.events if e["event"] == "serve_degraded"]
+    assert degraded and degraded[0]["active"] is True
+    assert len(out[0].out_tokens) == 8  # already admitted: budget untouched
+    assert len(out[1].out_tokens) == 2  # admitted degraded: capped
+    assert all(r.status is RequestStatus.COMPLETED for r in out)
+
+
+# ---------------------------------------------------------------------------
+# engine: graceful drain
+# ---------------------------------------------------------------------------
+
+def test_drain_under_load_finishes_inflight_sheds_queue(served):
+    """Drain stops admissions and sheds the backlog while the in-flight
+    request finishes inside the grace window."""
+    model, params = served
+    log = EventLog.memory()
+    eng = ContinuousEngine(model, params, n_slots=1, max_len=32,
+                           telemetry=log)
+    flag = {"drain": False}
+    out = eng.generate(
+        _reqs(4, max_new=6),
+        on_token=lambda r, t: flag.__setitem__("drain", True),
+        should_drain=lambda: flag["drain"],
+        drain_grace_s=30.0,
+    )
+    assert _counts(out) == {"completed": 1, "shed": 3, "timed_out": 0,
+                            "failed": 0}
+    assert all(r.shed_reason == "drain" for r in out[1:])
+    drains = [e for e in log.events if e["event"] == "serve_drain"]
+    assert len(drains) == 1 and drains[0]["queued"] == 3
+    assert drains[0]["in_flight"] == 1
+    assert eng.pool.n_free == 1
+
+
+def test_drain_grace_expiry_sheds_inflight(served):
+    """Past the grace deadline even in-flight work is shed — the process
+    must be able to exit."""
+    model, params = served
+    eng = ContinuousEngine(model, params, n_slots=1, max_len=64)
+    flag = {"drain": False}
+    out = eng.generate(
+        _reqs(2, max_new=40),
+        on_token=lambda r, t: flag.__setitem__("drain", True),
+        should_drain=lambda: flag["drain"],
+        drain_grace_s=0.0,
+    )
+    assert all(r.status is RequestStatus.SHED for r in out)
+    assert out[0].out_tokens  # was genuinely in flight when shed
+    assert eng.pool.n_free == 1
+
+
+# ---------------------------------------------------------------------------
+# invariant: every request ends in exactly one terminal state
+# ---------------------------------------------------------------------------
+
+def test_every_request_one_terminal_state_under_chaos(served):
+    """Overload + deadline pressure + mixed faults: the four terminal
+    counters stay disjoint and sum to the submitted total, and a replay
+    reproduces them exactly."""
+    model, params = served
+    eng = ContinuousEngine(
+        model, params, n_slots=2, max_len=32,
+        scheduler=FCFSScheduler(max_queue=2),
+        faults=ServeFaultInjector([
+            # keyed to the head of the line: with max_queue=2 and a closed
+            # batch only the two oldest arrivals survive the first sweep
+            ServeFaultSpec("slot_corrupt", at=0),
+            ServeFaultSpec("sample_nan", at=1, once=False),
+        ]))
+    first = None
+    for _ in range(2):
+        eng.faults.reset()
+        eng.scheduler = FCFSScheduler(max_queue=2)
+        out = eng.generate(_reqs(8, max_new=6))
+        counts = _counts(out)
+        assert sum(counts.values()) == 8
+        assert counts["failed"] == 1 and counts["shed"] > 0
+        # each request is in exactly one bucket (states are disjoint)
+        for r in out:
+            assert [r.status is s for s in (
+                RequestStatus.COMPLETED, RequestStatus.SHED,
+                RequestStatus.TIMED_OUT, RequestStatus.FAILED,
+            )].count(True) == 1
+        if first is None:
+            first = counts
+    assert counts == first  # deterministic, replayable
+
+
+def test_nonterminal_roster_raises(served):
+    """generate() refuses to return a request in a non-terminal state —
+    the accounting bug surfaces loudly, not as a silent drop."""
+    model, params = served
+    eng = ContinuousEngine(model, params, n_slots=1, max_len=32)
+    req = eng.submit(ServeRequest(np.zeros(4, np.int32), max_new_tokens=2))
+    eng.scheduler._queue.clear()   # simulate a scheduler that loses a request
+    eng.scheduler._keys.clear()
+    with pytest.raises(RuntimeError, match="non-terminal"):
+        eng.generate()
+
+
+# ---------------------------------------------------------------------------
+# telemetry folding
+# ---------------------------------------------------------------------------
+
+def test_report_folds_serve_lifecycle(served):
+    model, params = served
+    log = EventLog.memory()
+    eng = ContinuousEngine(
+        model, params, n_slots=2, max_len=32, telemetry=log,
+        faults=ServeFaultInjector([
+            ServeFaultSpec("sample_nan", at=0),
+            ServeFaultSpec("slot_corrupt", at=1, once=False),
+        ]),
+        max_retries=1)
+    out = eng.generate(_reqs(4))
+    report = RunReport.from_events(log).report
+    serve = report["serve"]
+    assert serve["by_status"] == _counts(out)
+    assert sum(serve["by_status"].values()) == serve["requests"] == 4
+    assert serve["lifecycle"]["retries"] == 2   # nan retry + corrupt retry
+    assert serve["lifecycle"]["quarantines"] == 2
+    assert serve["stats"]["failed"] == 1
+    assert serve["stats"]["submitted"] == 4
